@@ -1,0 +1,78 @@
+"""E4 (paper C1): block-GEMM / flash-attention kernel microbench.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-clock is NOT the metric; we report (a) allclose vs oracle, (b) the
+reference-path jnp wall time as the CPU baseline, and (c) modeled TPU v5e
+time from the roofline (max of MXU time and HBM time for the chosen tiles).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cgra import select_block_shapes
+from repro.core.quant import quantize
+from repro.kernels import ref
+from repro.kernels.block_gemm import block_gemm
+from repro.kernels.flash_attention import flash_attention
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.RandomState(0)
+    out = ["# E4 kernel microbench"]
+    out.append("name,us_per_call,derived")
+    for (m, k, n) in [(512, 512, 512), (1024, 2048, 1024)]:
+        a = jnp.asarray(rng.randn(m, k), jnp.float32)
+        b = jnp.asarray(rng.randn(k, n), jnp.float32)
+        got = block_gemm(a, b, block_shape=(128, 128, 128), interpret=True)
+        ok = np.allclose(np.asarray(got), np.asarray(ref.block_gemm_ref(a, b)),
+                         atol=1e-2)
+        us = _time(jax.jit(lambda x, y: ref.block_gemm_ref(x, y)), a, b)
+        bm, bk, bn = select_block_shapes(m, k, n, 4)
+        flops = 2 * m * k * n
+        bytes_ = (m * k + k * n + m * n) * 4
+        t_tpu = max(flops / PEAK, bytes_ / HBM) * 1e6
+        out.append(f"block_gemm_{m}x{k}x{n},{us:.0f},"
+                   f"allclose={ok} tile=({bm}.{bk}.{bn}) model_tpu_us={t_tpu:.1f}")
+    B, H, S, D = 1, 4, 512, 64
+    q = jnp.asarray(rng.randn(B, H, S, D) * .3, jnp.float32)
+    kk = jnp.asarray(rng.randn(B, H, S, D) * .3, jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, S, D) * .3, jnp.float32)
+    got = flash_attention(q, kk, v, causal=True, bq=128, bk=128, interpret=True)
+    ok = np.allclose(np.asarray(got),
+                     np.asarray(ref.flash_attention_ref(q, kk, v, causal=True)),
+                     atol=2e-3)
+    us = _time(jax.jit(lambda a1, a2, a3: ref.flash_attention_ref(
+        a1, a2, a3, causal=True)), q, kk, v)
+    flops = 4 * B * H * S * S * D
+    t_tpu = max(flops / PEAK, (3 * B * H * S * D * 4) / HBM) * 1e6
+    out.append(f"flash_attn_{B}x{H}x{S}x{D},{us:.0f},"
+               f"allclose={ok} model_tpu_us={t_tpu:.1f}")
+
+    a = rng.randn(512, 512).astype(np.float32)
+    b = rng.randn(512, 512).astype(np.float32)
+    aq = quantize(jnp.asarray(a), axis=0)
+    bq = quantize(jnp.asarray(b), axis=-1)
+    from repro.kernels.block_gemm import block_gemm_int8
+    got = block_gemm_int8(aq.q, bq.q, aq.scale, bq.scale.reshape(1, -1),
+                          block_shape=(128, 128, 128), interpret=True)
+    rel = np.median(np.abs(np.asarray(got) - a @ b) / (np.abs(a @ b) + 1))
+    out.append(f"block_gemm_int8_512,0,median_rel_err={rel:.4f} (w8a8 packed path)")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

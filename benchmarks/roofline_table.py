@@ -1,0 +1,63 @@
+"""E6: aggregate the dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+import glob
+import json
+import os
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "out", "dryrun")
+
+
+def load(mesh: str, tag: str | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT, mesh, "*.json"))):
+        name = os.path.basename(f)[:-5]
+        is_tagged = "--" in name.split("--", 2)[-1] if name.count("--") >= 2 else False
+        if tag is None and name.count("--") >= 2:
+            continue
+        if tag is not None and not name.endswith(f"--{tag}"):
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> list[str]:
+    out = ["| arch | shape | peak GiB/dev | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| bottleneck | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if "skipped" in d:
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | "
+                       f"skip: {d['skipped'][:48]} | — | — |")
+            continue
+        if "error" in d:
+            out.append(f"| {d['arch']} | {d['shape']} | ERROR {d['error'][:40]} |")
+            continue
+        r = d.get("roofline")
+        m = d["memory"]["peak_per_device_gib"]
+        if not r:
+            out.append(f"| {d['arch']} | {d['shape']} | {m} | compiled (multi-pod "
+                       f"pass, costs single-pod only) | | | | | |")
+            continue
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {m:.1f} | {r['t_compute_s']:.2f} | "
+            f"{r['t_memory_s']:.2f} | {r['t_collective_s']:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return out
+
+
+def run() -> list[str]:
+    out = ["# E6 roofline table (single-pod 16x16, baseline)"]
+    out.extend(fmt_table(load("pod16x16")))
+    multi = load("pod2x16x16")
+    if multi:
+        ok = sum(1 for d in multi if "memory" in d)
+        skip = sum(1 for d in multi if "skipped" in d)
+        err = sum(1 for d in multi if "error" in d)
+        out.append("")
+        out.append(f"# multi-pod 2x16x16 pass: {ok} compiled, {skip} skipped, "
+                   f"{err} errors")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,54 @@
+"""The paper's scenario end to end: int8 (packed-data) transformer inference
+through the CGRA block-GEMM path, validated against the fp32 reference and
+costed on the 4x4 PE / 4x2 MOB array.
+
+    PYTHONPATH=src python examples/edge_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cgra import CGRAConfig, simulate_transformer_layer
+from repro.core.gemm import cgra_gemm_w8a8
+from repro.core.quant import quantize
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("cgra-edge")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    # fp32 reference hidden states
+    hidden, _, _ = M.forward_hidden(cfg, params, {"tokens": tokens}, mode="train")
+    logits_ref = M.lm_logits(cfg, params, hidden)
+
+    # w8a8 path for the LM head GEMM (the hot 256x30522 projection): packed
+    # int8 with per-channel scales through the CGRA kernel (interpret mode)
+    head_q = quantize(params["lm_head"], axis=-1)
+    logits_q = cgra_gemm_w8a8(hidden, head_q, mode="interpret")
+    rel = np.abs(np.asarray(logits_q) - np.asarray(logits_ref)) / (
+        np.abs(np.asarray(logits_ref)) + 1.0)
+    agree = float(np.mean(np.argmax(np.asarray(logits_q), -1)
+                          == np.argmax(np.asarray(logits_ref), -1)))
+    print(f"w8a8 LM head: median rel err {np.median(rel):.4f}, "
+          f"argmax agreement {agree:.3f}")
+
+    # energy/latency budget on the paper's array
+    cgra = CGRAConfig()
+    tot, reps = simulate_transformer_layer(cgra, cfg.d_model, cfg.num_heads,
+                                           cfg.head_dim, cfg.d_ff, seq=S)
+    print(f"CGRA per-layer: {tot.time_us/1e3:.2f} ms, {tot.energy_pj/1e6:.1f} uJ, "
+          f"{tot.power_mw:.2f} mW, PE util {tot.pe_utilization:.2f}")
+    print(f"full {cfg.num_layers}-layer forward: "
+          f"{cfg.num_layers*tot.time_us/1e3:.1f} ms @ ~{tot.power_mw:.1f} mW "
+          f"-> edge-deployable (paper's ultra-low-power class)")
+    for name, r in list(reps.items())[:3]:
+        print(f"  {name:8s} cycles={r.cycles:8d} AI={r.arithmetic_intensity:5.1f} "
+              f"util={r.pe_utilization:.2f}")
+
+
+if __name__ == "__main__":
+    main()

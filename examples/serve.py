@@ -1,0 +1,45 @@
+"""End-to-end serving driver: batched requests through prefill + decode with
+a growable KV cache (the same serve_step the dry-run lowers at pod scale).
+
+    PYTHONPATH=src python examples/serve.py --arch gemma3-4b --max-new 24
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.serving.engine import (Engine, bytes_tokenizer_decode,
+                                  bytes_tokenizer_encode)
+
+REQUESTS = [
+    "the paper proposes a 4x4 PE array",
+    "switchless mesh torus interconnects reduce",
+    "block-wise GEMM execution increases data reuse",
+    "ultra low power edge inference",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params)
+
+    prompts = [bytes_tokenizer_encode(r, cfg.vocab_size) for r in REQUESTS]
+    out, stats = eng.generate(prompts, max_new=args.max_new,
+                              temperature=args.temperature)
+    print(f"arch={cfg.name} batch={len(prompts)} prefill={stats.prefill_s:.2f}s "
+          f"decode={stats.decode_s:.2f}s ({stats.tokens_per_s:.1f} tok/s)")
+    for req, seq in zip(REQUESTS, out):
+        gen = bytes_tokenizer_decode(seq[len(bytes_tokenizer_encode(req, cfg.vocab_size)):])
+        print(f"  [{req[:40]:40s}] -> {gen!r}")
+
+
+if __name__ == "__main__":
+    main()

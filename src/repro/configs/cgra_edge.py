@@ -1,0 +1,25 @@
+"""cgra-edge — the paper's own deployment target: a tiny transformer whose
+GEMMs run through the CGRA block-GEMM path (int8, 4x4 PE array, 4x2 MOBs).
+
+The paper gives no concrete model; this is a representative edge transformer
+(BERT-tiny class) used by ``examples/edge_inference.py`` and the CGRA
+simulator benchmarks.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="cgra-edge",
+    family="dense",
+    num_layers=4,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=1024,
+    vocab_size=30_522,
+    param_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    fsdp=False,
+)

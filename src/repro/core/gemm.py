@@ -1,0 +1,33 @@
+"""Block-wise GEMM public API (paper C1/C4).
+
+``cgra_gemm`` is the framework's single GEMM entry point: model layers route
+through it, the mode flag selects the reference jnp path (dry-run / oracle),
+the Pallas interpret path (CPU validation) or the compiled TPU kernel.  The
+int8 path covers the paper's packed-data edge-inference scenario end to end
+(quantize -> packed GEMM -> fused dequant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize
+from repro.kernels.ops import cgra_matmul, cgra_matmul_int8
+
+
+def cgra_gemm(a, b, mode: str = "reference"):
+    """C = A[..., M, K] @ B[K, N]; leading batch dims of A are flattened."""
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    out = cgra_matmul(a2, b, mode)
+    return out.reshape(*lead, b.shape[-1])
+
+
+def cgra_gemm_w8a8(x, w_q: QTensor, mode: str = "reference",
+                   out_dtype=jnp.float32):
+    """Dynamic-activation int8 GEMM: quantize x per-row, packed GEMM against
+    pre-quantized weights (per-col scales)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q = quantize(x2, axis=0)  # per-row scales [M,1]
+    w_scale = w_q.scale.reshape(1, -1)
+    out = cgra_matmul_int8(x_q.q, w_q.q, x_q.scale, w_scale, mode, out_dtype)
+    return out.reshape(*lead, w_q.q.shape[-1])

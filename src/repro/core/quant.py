@@ -1,0 +1,58 @@
+"""int8 quantization — the paper's "packed data" path (C1) plus the
+error-feedback gradient compressor used for cross-pod data parallelism."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class QTensor(NamedTuple):
+    q: jax.Array  # int8
+    scale: jax.Array  # f32, per-channel over the last dim (or scalar)
+
+
+def quantize(x, axis: int | None = -1) -> QTensor:
+    """Symmetric int8 quantization with per-channel scales along `axis`."""
+    xf = x.astype(F32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(xf))
+    else:
+        red = tuple(i for i in range(xf.ndim) if i != (axis % xf.ndim))
+        amax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(F32))
+
+
+def dequantize(qt: QTensor, dtype=F32):
+    return (qt.q.astype(F32) * qt.scale).astype(dtype)
+
+
+def quantized_matmul_ref(x_q: QTensor, w_q: QTensor, out_dtype=F32):
+    """(x_scale * x_q) @ (w_q * w_scale) with int32 accumulation.
+
+    x_q.q: [..., K] (per-row scales), w_q.q: [K, N] (per-col scales)."""
+    acc = jnp.matmul(x_q.q.astype(jnp.int32), w_q.q.astype(jnp.int32))
+    return (acc.astype(F32) * x_q.scale * w_q.scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback int8 gradient compression (cross-pod DP all-reduce)
+# ---------------------------------------------------------------------------
+
+def compress_grad(g, err):
+    """Returns (q: QTensor with scalar scale, new_err).  `err` carries the
+    quantization residual into the next step (error feedback), which keeps
+    SGD/Adam convergence unbiased to first order."""
+    gf = g.astype(F32) + err
+    qt = quantize(gf, axis=None)
+    deq = dequantize(qt)
+    return qt, gf - deq
+
+
+def decompress_grad(qt: QTensor, dtype=F32):
+    return dequantize(qt, dtype)

@@ -1,0 +1,139 @@
+"""CGRA-style block-wise GEMM as a Pallas TPU kernel (paper claims C1/C2/C4).
+
+The mapping from the paper's 4x4 edge array to the TPU (DESIGN.md §2):
+
+- the PE array's output-stationary sub-matrix blocking -> BlockSpec tiles
+  (bm x bn) output blocks accumulated over a bk-strided K grid in a VMEM
+  scratch accumulator (f32 / int32);
+- the 4x2 MOB LOAD/STORE decoupling -> the pallas_call grid pipeline, which
+  double-buffers the HBM->VMEM block copies of A and B ahead of the MXU
+  (Pallas emits exactly the decoupled address-generation/DMA the MOBs
+  implement in silicon);
+- the "packed-data dot product" -> the int8 variant (int8 x int8 -> int32)
+  with per-row/per-col rescale fused into the epilogue.
+
+Block shapes come from ``repro.core.cgra.select_block_shapes`` — the same
+mapper that places blocks on the 4x4 array, re-parameterized for VMEM/MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.cgra import select_block_shapes
+
+F32 = jnp.float32
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=F32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def block_gemm(a, b, *, block_shape=None, out_dtype=None, interpret=False):
+    """C = A[M,K] @ B[K,N], output-stationary block accumulation.
+
+    Arbitrary shapes are padded up to the block grid (the CGRA handles
+    ragged edges the same way: partial blocks run at lower utilization).
+    """
+    out_dtype = out_dtype or a.dtype
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    if block_shape is None:
+        block_shape = select_block_shapes(M, K, N, dtype_bytes=a.dtype.itemsize)
+    bm, bk, bn = block_shape
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    Mp, Kp = ap.shape
+    Np = bp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:M, :N]
+
+
+def _gemm_int8_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...],
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():  # fused dequant epilogue: per-row x per-col scales
+        o_ref[...] = (acc_ref[...].astype(F32) * sa_ref[...] * sb_ref[...]
+                      ).astype(o_ref.dtype)
+
+
+def block_gemm_int8(a_q, b_q, a_scale, b_scale, *, block_shape=None,
+                    out_dtype=F32, interpret=False):
+    """Packed-data GEMM: int8 operands, int32 accumulate, fused rescale.
+
+    a_q: [M,K] int8; b_q: [K,N] int8; a_scale: [M,1] f32; b_scale: [1,N] f32.
+    """
+    M, K = a_q.shape
+    N = b_q.shape[1]
+    if block_shape is None:
+        block_shape = select_block_shapes(M, K, N, dtype_bytes=1)
+    bm, bk, bn = block_shape
+    ap = _pad_to(a_q, bm, bk)
+    bp = _pad_to(b_q, bk, bn)
+    sa = _pad_to(a_scale.astype(F32), bm, 1)
+    sb = _pad_to(b_scale.astype(F32), 1, bn)
+    Mp, Kp = ap.shape
+    Np = bp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_gemm_int8_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(ap, bp, sa, sb)
+    return out[:M, :N]

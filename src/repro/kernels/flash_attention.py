@@ -1,0 +1,101 @@
+"""Flash attention as a Pallas TPU kernel (online softmax, VMEM-blocked).
+
+Block-wise attention is the paper's C1/C4 applied to the attention GEMM pair:
+the (bq x bk) score tile never leaves VMEM, the running max/denominator are
+the output-stationary accumulator state, and the KV block streaming is the
+MOB prefetch pipeline.  Supports causal masking, sliding windows (Gemma-3
+local layers) and GQA via index-map head folding (no KV broadcast in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               nk: int, bq: int, bk: int, sq: int, sk: int, scale: float,
+               causal: bool, window: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # [bq, bk]
+
+    iq = pl.program_id(1)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
+                    scale=None, interpret=False):
+    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] with H % K == 0 (GQA folded in the
+    BlockSpec index map).  Sq % bq == 0 and Sk % bk == 0 required."""
+    B, H, Sq, d = q.shape
+    K = k.shape[1]
+    Sk = k.shape[2]
+    G = H // K
+    assert Sq % min(bq, Sq) == 0 and Sk % min(bk, Sk) == 0
+    bq, bk_ = min(bq, Sq), min(bk, Sk)
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.reshape(B * H, Sq, d)
+    kf = k.reshape(B * K, Sk, d)
+    vf = v.reshape(B * K, Sk, d)
+    nk = Sk // bk_
+    grid = (B * H, Sq // bq, nk)
+
+    def kv_map(bh, iq, ik):
+        return ((bh // H) * K + (bh % H) // G, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, nk=nk, bq=bq, bk=bk_, sq=Sq, sk=Sk,
+                          scale=scale, causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk_, d), kv_map),
+            pl.BlockSpec((1, bk_, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, d), F32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, d)

@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels, with kernel_mode dispatch
+(reference | interpret | pallas) and a custom VJP for the block GEMM so the
+kernel path is trainable."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_gemm import block_gemm, block_gemm_int8
+from repro.kernels.flash_attention import flash_attention
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cgra_matmul(a, b, mode: str = "reference"):
+    """C = A @ B through the CGRA block-GEMM path."""
+    if mode == "reference":
+        return ref.block_gemm_ref(a, b)
+    return block_gemm(a, b, interpret=(mode == "interpret"))
+
+
+def _mm_fwd(a, b, mode):
+    return cgra_matmul(a, b, mode), (a, b)
+
+
+def _mm_bwd(mode, res, g):
+    a, b = res
+    ga = cgra_matmul(g.astype(b.dtype), b.T, mode).astype(a.dtype)
+    gb = cgra_matmul(a.T, g.astype(a.dtype), mode).astype(b.dtype)
+    return ga, gb
+
+
+cgra_matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+def cgra_matmul_int8(a_q, b_q, a_scale, b_scale, mode: str = "reference",
+                     out_dtype=jnp.float32):
+    """Packed int8 GEMM with fused per-row/per-col dequant (inference)."""
+    if mode == "reference":
+        return ref.block_gemm_int8_ref(a_q, b_q, a_scale, b_scale, out_dtype)
+    return block_gemm_int8(a_q, b_q, a_scale, b_scale,
+                           interpret=(mode == "interpret"), out_dtype=out_dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, mode: str = "reference",
+              bq=128, bk=128):
+    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0)."""
+    if mode == "reference":
+        G = q.shape[1] // k.shape[1]
+        kb = jnp.repeat(k, G, axis=1)
+        vb = jnp.repeat(v, G, axis=1)
+        return ref.flash_attention_ref(q, kb, vb, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                           interpret=(mode == "interpret"))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def block_gemm_ref(a, b, out_dtype=None):
+    """C = A @ B with f32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=F32).astype(out_dtype)
+
+
+def block_gemm_int8_ref(a_q, b_q, a_scale, b_scale, out_dtype=F32):
+    """int8 x int8 -> int32 accumulate, rescale per-row(a) x per-col(b).
+
+    a_q: [M,K] int8, b_q: [K,N] int8, a_scale: [M,1] f32, b_scale: [1,N] f32.
+    """
+    acc = jnp.matmul(a_q.astype(jnp.int32), b_q.astype(jnp.int32))
+    return (acc.astype(F32) * a_scale * b_scale).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [B,H,Sq,d], k/v: [B,H,Sk,d] (kv heads already broadcast)."""
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=F32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos + (Sk - Sq)  # align last query with last key
+    if window:
+        mask &= kpos > qpos + (Sk - Sq) - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

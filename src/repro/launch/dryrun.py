@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod (16 data x 16 model = 256 chips) and multi-pod (2 pods = 512
+chips) production meshes, record memory_analysis / cost_analysis /
+collective schedule, and derive roofline terms.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module
+(before any jax import) — jax locks the device count on first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi       # 512-chip pass
+    ... --set remat_policy=dots --set use_torus_tp=1 --tag mytag    # perf knobs
+
+Results land in out/dryrun/<mesh>/<arch>--<shape>[--tag].json and are
+aggregated into EXPERIMENTS.md tables by benchmarks/roofline_table.py.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, cell_skip_reason, get_config
+from repro.launch import roofline as RL
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import activation_mesh
+from repro.training.optimizer import AdamWConfig
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "out", "dryrun")
+
+
+def _compile(cell, mesh):
+    # in_shardings are NamedShardings (mesh attached) — no ambient mesh needed
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate)
+    from repro.launch.sharding import profile_for
+    t0 = time.time()
+    with activation_mesh(mesh, profile_for(cell.cfg)):  # trace-time constraints
+        lowered = jitted.lower(*cell.args)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    return lowered, compiled, dt
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
+             overrides: dict, opt: AdamWConfig, do_roofline: bool,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    overrides = dict(overrides or {})
+    accum = int(overrides.pop("accum_steps", 1))
+    compress_pod = bool(overrides.pop("compress_pod", False))
+    if overrides.pop("f32", False):  # CPU-XLA: 16-bit ops inside manual
+        cfg = cfg.with_(param_dtype=jnp.float32,  # regions trip a promotion-
+                        compute_dtype=jnp.float32)  # pass abort; TPU is fine
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": mesh.size, "overrides": overrides, "tag": tag}
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    # --- full-depth compile: proves sharding + gives memory analysis.
+    # Query-chunked attention bounds the transient score tensors (the jnp
+    # analogue of the Pallas flash kernel's VMEM blocking); identical math,
+    # so the cost compiles below (which must stay scan-free) use chunk=0.
+    chunk = 0 if shape.step == "decode" else min(2048, shape.seq_len // 2)
+    cell = build_cell(cfg, shape, mesh, opt=opt, attn_chunk=chunk,
+                      accum_steps=accum, compress_pod=compress_pod)
+    lowered, compiled, dt = _compile(cell, mesh)
+    ma = compiled.memory_analysis()
+    rec["compile_s"] = round(dt, 1)
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_per_device_gib": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+    }
+    full_coll = RL.collective_bytes(compiled.as_text())
+    rec["scan_hlo_collectives"] = {k: v for k, v in full_coll.items()
+                                   if k != "counts"}
+
+    if do_roofline:
+        # --- cost compiles: unrolled main stage at depths 1 and 2
+        stages = cell.cfg.stages()
+        main = max(range(len(stages)), key=lambda i: stages[i].repeats)
+        repeats = stages[main].repeats
+        from repro.models.layers import ATTN_STUB
+        costs, colls, stub_bytes = [], [], []
+        for r in (1, 2):
+            c = build_cell(cfg, shape, mesh, opt=opt, main_repeats=r,
+                           scan_layers=False, attn_chunk=0)
+            lw, cp, _ = _compile(c, mesh)
+            costs.append(cp.cost_analysis())
+            colls.append(RL.collective_bytes(cp.as_text()))
+            # flash-adjusted memory: same model with the attention core
+            # replaced by a qkvo-traffic stand-in (the Pallas kernel's HBM
+            # footprint); its "bytes accessed" IS the adjusted term.
+            # Fresh build_cell -> fresh closures, so the jit cache can't
+            # serve the non-stub trace.
+            tok = ATTN_STUB.set(True)
+            try:
+                c2 = build_cell(cfg, shape, mesh, opt=opt, main_repeats=r,
+                                scan_layers=False, attn_chunk=0)
+                _, cps, _ = _compile(c2, mesh)
+            finally:
+                ATTN_STUB.reset(tok)
+            stub_bytes.append(cps.cost_analysis().get("bytes accessed", 0.0))
+        attn1 = max(costs[0].get("bytes accessed", 0.0) - stub_bytes[0], 0.0)
+        attn2 = max(costs[1].get("bytes accessed", 0.0) - stub_bytes[1], 0.0)
+        terms = RL.terms_from_pair(costs[0], costs[1], colls[0], colls[1],
+                                   repeats, attn1, attn2)
+        mf = RL.model_flops(cell.cfg, shape)
+        rec["roofline"] = terms.as_dict()
+        rec["roofline"]["model_flops_total"] = mf
+        rec["roofline"]["model_flops_per_chip"] = mf / mesh.size
+        rec["roofline"]["useful_ratio"] = (mf / mesh.size) / max(terms.flops, 1.0)
+        rec["roofline"]["t_bound_overlap_s"] = terms.t_bound_overlap
+        rec["roofline"]["t_bound_serial_s"] = terms.t_bound_serial
+        rec["roofline"]["roofline_fraction"] = (
+            (mf / mesh.size / RL.PEAK_FLOPS) / max(terms.t_bound_overlap, 1e-30))
+        rec["roofline"]["roofline_fraction_flash"] = (
+            (mf / mesh.size / RL.PEAK_FLOPS)
+            / max(terms.t_bound_overlap_flash, 1e-30))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--moments", default="f32", choices=["f32", "bf16", "int8"])
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    ap.add_argument("--force", action="store_true", help="recompute existing")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.sets:
+        k, v = kv.split("=", 1)
+        overrides[k] = (v if not v.lstrip("-").isdigit() else int(v)) \
+            if v not in ("True", "False") else v == "True"
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    opt = AdamWConfig(moments_dtype=args.moments)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mname = "pod2x16x16" if multi else "pod16x16"
+        mdir = os.path.join(OUT_DIR, mname)
+        os.makedirs(mdir, exist_ok=True)
+        for arch in archs:
+            for shape in shapes:
+                suffix = f"--{args.tag}" if args.tag else ""
+                fn = os.path.join(mdir, f"{arch}--{shape}{suffix}.json")
+                if os.path.exists(fn) and not args.force:
+                    print(f"[skip existing] {mname} {arch} {shape}")
+                    continue
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, mesh, mname,
+                                   overrides=overrides, opt=opt,
+                                   do_roofline=(not args.no_roofline and not multi),
+                                   tag=args.tag)
+                except Exception as e:  # a cell failure is a bug: record it
+                    rec = {"arch": arch, "shape": shape, "mesh": mname,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append((mname, arch, shape, str(e)[:120]))
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+                status = ("SKIP " + rec["skipped"][:40] if "skipped" in rec
+                          else "ERROR " + rec["error"][:60] if "error" in rec
+                          else f"ok mem={rec['memory']['peak_per_device_gib']}GiB")
+                print(f"[{time.time()-t0:6.1f}s] {mname} {arch:22s} {shape:12s} {status}",
+                      flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", *f_)
+        raise SystemExit(1)
+    print("\nDRY-RUN PASS")
+
+
+if __name__ == "__main__":
+    main()

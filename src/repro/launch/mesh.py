@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to build these meshes on CPU.
+
+Topology note: a v5e pod's ICI is a physical 2-D torus; ``jax.make_mesh``
+orders devices so that neighboring mesh coordinates are ICI neighbors —
+which is exactly what the paper's switchless-torus schedules
+(``repro.core.torus``) assume.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes used for batch/data parallelism, pod-major."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def host_mesh(n: int = 1, model: int = 1):
+    """Small local mesh for examples/tests on real CPU devices."""
+    return make_mesh((n, model), ("data", "model"))

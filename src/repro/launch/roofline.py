@@ -1,0 +1,230 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes        / (chips * HBM_BW)
+    collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` on *unrolled*
+cost compiles at main-stage depths 1 and 2, linearly extrapolated to full
+depth (XLA counts a scan body once, so the production scan compile cannot be
+used for costs — see DESIGN.md §5).  collective_bytes is parsed from the
+optimized HLO text with op-specific wire-byte factors.
+
+Hardware constants: TPU v5e-class — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI (1 link assumed per transfer; conservative).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        nb = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+# wire-byte multiplier on the *output* shape, ring-algorithm estimates:
+#   all-gather      out ~ gathered size; each device receives (n-1)/n out ~ out
+#   all-reduce      ring RS+AG moves ~2x the buffer
+#   reduce-scatter  input is n x output; each device moves ~ n x out ~ in
+#   all-to-all      each device sends/receives (n-1)/n of the buffer ~ out
+#   collective-permute  one neighbor hop, exactly out bytes
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, from optimized HLO text.
+    reduce-scatter is scaled by its group size (parsed where possible)."""
+    out = {k: 0.0 for k in _FACTORS}
+    counts = {k: 0 for k in _FACTORS}
+    cross_pod = 0.0  # collectives whose replica groups have size 2 = pod axis
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: bytes counted at the -start op
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out_bytes = _shape_bytes(m.group(1))  # output type(s) on the lhs
+        if m.group(3):  # -start returns an (input, output, ...) tuple alias
+            out_bytes /= 2
+        factor = _FACTORS[kind]
+        gsize = _group_size(line)
+        if kind == "reduce-scatter":
+            factor = max(1.0, gsize - 1.0)
+        out[kind] += out_bytes * factor
+        counts[kind] += 1
+        if gsize == 2:  # pod-axis (DCN-class links) traffic, tracked apart
+            cross_pod += out_bytes * factor
+    out["total"] = sum(v for k, v in out.items() if k in _FACTORS)
+    out["cross_pod"] = cross_pod
+    out["counts"] = counts
+    return out
+
+
+def scope_output_bytes(hlo_text: str, scope: str = "attn_core") -> float:
+    """~2x output bytes of every op inside `scope` (named_scope metadata).
+
+    Used for the flash-adjusted memory term: the attention core runs as the
+    validated Pallas flash kernel on the TPU target, whose score tensors
+    never leave VMEM; the reference-jnp HLO materializes them per op.  2x
+    output (one read + one write) per op is a *conservative* (under-)
+    estimate of what cost_analysis charged, so the adjusted term stays an
+    upper bound."""
+    total = 0.0
+    for line in hlo_text.splitlines():
+        if scope not in line:
+            continue
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        m = _SHAPE_RE.search(line, eq)
+        if m:
+            total += 2 * _shape_bytes(m.group(0))
+    return total
+
+
+def _group_size(line: str) -> float:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota form [ngroups, group_size]
+        return int(m.group(2))
+    return 16.0  # mesh model-axis default
+
+
+@dataclass
+class RooflineTerms:
+    flops: float = 0.0  # per-device HLO flops
+    bytes: float = 0.0  # per-device HBM bytes accessed
+    coll_bytes: float = 0.0  # per-device wire bytes
+    attn_core_bytes: float = 0.0  # reference-attention HBM traffic that the
+    # Pallas flash kernel keeps in VMEM on the TPU target
+    coll_detail: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes / HBM_BW
+
+    @property
+    def t_memory_flash(self) -> float:
+        """Memory term with the attention core costed as the flash kernel."""
+        return max(self.bytes - self.attn_core_bytes, 0.0) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound_serial(self) -> float:
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def t_bound_overlap(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_bound_overlap_flash(self) -> float:
+        return max(self.t_compute, self.t_memory_flash, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "coll_bytes": self.coll_bytes,
+            "attn_core_bytes": self.attn_core_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_memory_flash_s": self.t_memory_flash,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def extrapolate(v1: float, v2: float, repeats: int) -> float:
+    """Linear depth extrapolation from main-stage repeats 1 and 2."""
+    return v1 + (v2 - v1) * (repeats - 1)
+
+
+def terms_from_pair(cost1: dict, cost2: dict, coll1: dict, coll2: dict,
+                    repeats: int, attn1: float = 0.0,
+                    attn2: float = 0.0) -> RooflineTerms:
+    fl = extrapolate(cost1.get("flops", 0.0), cost2.get("flops", 0.0), repeats)
+    by = extrapolate(cost1.get("bytes accessed", 0.0),
+                     cost2.get("bytes accessed", 0.0), repeats)
+    cb = extrapolate(coll1["total"], coll2["total"], repeats)
+    ab = extrapolate(attn1, attn2, repeats)
+    detail = {k: extrapolate(coll1[k], coll2[k], repeats)
+              for k in _FACTORS}
+    return RooflineTerms(flops=fl, bytes=by, coll_bytes=cb,
+                         attn_core_bytes=ab, coll_detail=detail)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (analytic "useful work") per config
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> tuple[int, int]:
+    """(total, active-per-token) parameter counts, from the param specs."""
+    from repro.models.model import param_specs
+    from repro.models.params import is_spec
+    import jax, math
+    total = active = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            param_specs(cfg), is_leaf=is_spec)[0]:
+        n = math.prod(s.shape)
+        total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "experts" in str(s.axes) and "ffn" in str(s.axes):
+            active += n * cfg.experts_per_token / max(1, cfg.num_experts)
+        elif "vocab" in str(s.axes):
+            active += n  # embed+head counted once (gather is cheap but the
+            # head GEMM is real; keep both for a conservative ratio)
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*tokens (train) / 2*N_active*tokens (inference)."""
+    _, act = active_params(cfg)
+    toks = shape.global_batch * (shape.seq_len if shape.step != "decode" else 1)
+    mult = 6 if shape.step == "train" else 2
+    return float(mult * act * toks)

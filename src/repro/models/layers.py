@@ -1,0 +1,593 @@
+"""Reference (pure-jnp) transformer layers.
+
+These are the dry-run / oracle implementations: every op is a plain einsum /
+elementwise so the lowered HLO is analyzable by ``cost_analysis`` and the
+Pallas kernels in ``repro.kernels`` can be validated against them.  The
+launcher switches GEMM-heavy paths to the CGRA block-GEMM kernels via
+``cfg.kernel_mode`` (see ``repro.core.gemm``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+import functools
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain, current_mesh
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+NEG_INF = -1e9
+
+# When set (see launch/dryrun.py), `attend` replaces the score/softmax core
+# with a stand-in that touches only q/k/v/o-sized tensors — i.e. exactly the
+# HBM traffic of the Pallas flash kernel.  cost_analysis of this variant
+# gives the flash-adjusted memory roofline term; never used for real math.
+import contextvars
+
+ATTN_STUB: contextvars.ContextVar = contextvars.ContextVar("attn_stub",
+                                                           default=False)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ArchConfig) -> dict:
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm_type == "layernorm":
+        return {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+                "bias": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    return {}  # layernorm_nonparam
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x):
+    xf = x.astype(F32)
+    if cfg.norm_type == "rmsnorm":
+        xf = xf * lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (xf * p["scale"].astype(F32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * lax.rsqrt(var + 1e-6)
+    if cfg.norm_type == "layernorm":
+        xf = xf * p["scale"].astype(F32) + p["bias"].astype(F32)
+    return xf.astype(x.dtype)
+
+
+def rms_only(x, scale, eps=1e-6):
+    xf = x.astype(F32)
+    xf = xf * lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, n, d] (d even), positions: [S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions.astype(F32)[:, None] * freq[None, :]  # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (reference).  Supports causal / bidirectional, sliding
+# window, GQA grouping, optional query chunking (bounds the score-matrix
+# footprint — "flash attention in jnp") and a numerically-identical
+# unchunked path used for the roofline cost compiles.
+# ---------------------------------------------------------------------------
+
+def _scores_mask(q_pos, k_pos, causal: bool, window: int):
+    """[Sq, Sk] additive mask from absolute positions."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), F32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    return m
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
+           chunk: int = 0, softcap: float = 0.0):
+    """q: [B,Sq,H,dq], k: [B,Sk,K,dq], v: [B,Sk,K,dv] -> [B,Sq,H,dv].
+
+    GQA: H q-heads grouped onto K kv-heads (H % K == 0).
+    """
+    B, Sq, H, dq = q.shape
+    K = k.shape[2]
+    G = H // K
+    dv = v.shape[-1]
+    scale = dq ** -0.5
+    qg = q.reshape(B, Sq, K, G, dq)
+
+    def _block(qb, q_pos_b):
+        # qb: [B, sq, K, G, dq]
+        if ATTN_STUB.get():  # flash-traffic stand-in: q/k/v read, o write
+            vm = jnp.mean(v, axis=1)  # [B,K,dv]
+            km = jnp.sum(jnp.mean(k, axis=1), -1, keepdims=True)  # consume k
+            qs = jnp.sum(qb, axis=-1, keepdims=True) * 1e-9  # consume q
+            return (qs + (vm + km * 1e-9)[:, None, :, None, :]).astype(v.dtype)
+        with jax.named_scope("attn_core"):
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, k,
+                           preferred_element_type=F32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = s + _scores_mask(q_pos_b, k_pos, causal, window)[None, None, None]
+            s = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
+
+    if chunk and Sq > chunk and Sq % chunk == 0:
+        nb = Sq // chunk
+        qb = qg.reshape(B, nb, chunk, K, G, dq).transpose(1, 0, 2, 3, 4, 5)
+        pb = q_pos.reshape(nb, chunk)
+        out = lax.map(lambda args: _block(*args), (qb, pb))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, dv)
+    else:
+        out = _block(qg, q_pos)
+    return out.reshape(B, Sq, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (global or sliding-window local), with KV cache decode.
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict:
+    H, K, dh = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    D = cfg.d_model
+    p = {
+        "wq": ParamSpec((D, H, dh), ("embed", "heads", "qk")),
+        "wk": ParamSpec((D, K, dh), ("embed", "kv_heads", "qk")),
+        "wv": ParamSpec((D, K, dh), ("embed", "kv_heads", "qk")),
+        "wo": ParamSpec((H, dh, D), ("heads", "qk", "embed")),
+    }
+    if getattr(cfg, "use_qk_norm", False):
+        p["q_norm"] = ParamSpec((dh,), (None,), "ones")
+        p["k_norm"] = ParamSpec((dh,), (None,), "ones")
+    return p
+
+
+def _qkv(cfg, p, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cfg.compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cfg.compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cfg.compute_dtype))
+    if "q_norm" in p:
+        q = rms_only(q, p["q_norm"])
+        k = rms_only(k, p["k_norm"])
+    # pin batch/head sharding at the attention boundary — without this the
+    # partitioner replicated pure-FSDP score tensors over the model axis
+    # (measured: 64 GiB f32 scores on deepseek; EXPERIMENTS.md §Perf)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def attn_forward(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
+                 attn_chunk: int = 0):
+    """Training / encoder self-attention.  x: [B,S,D]."""
+    q, k, v = _qkv(cfg, p, x, x)
+    theta = cfg.rope_theta if not local else 10_000.0
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    causal = cfg.kind == "decoder"
+    window = cfg.window_size if local else 0
+    o = attend(q, k, v, positions, positions, causal=causal, window=window,
+               chunk=attn_chunk, softcap=cfg.logit_softcap)
+    o = constrain(o, ("batch", None, "heads", None))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+
+
+def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int, local: bool) -> dict:
+    K, dh = cfg.num_kv_heads, cfg.head_dim
+    S = min(seq, cfg.window_size) if (local and cfg.window_size) else seq
+    return {
+        "k": ParamSpec((batch, S, K, dh), ("batch", "kv_seq", "kv_heads", "qk"), "zeros"),
+        "v": ParamSpec((batch, S, K, dh), ("batch", "kv_seq", "kv_heads", "qk"), "zeros"),
+    }
+
+
+def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
+                 attn_chunk: int = 0):
+    """Returns (out, cache).  Cache keys are post-RoPE (standard practice)."""
+    q, k, v = _qkv(cfg, p, x, x)
+    theta = cfg.rope_theta if not local else 10_000.0
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    window = cfg.window_size if local else 0
+    o = attend(q, k, v, positions, positions, causal=True, window=window,
+               chunk=attn_chunk, softcap=cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    if window and k.shape[1] > window:
+        # ring-buffer cache: keep the last `window` keys, rolled so entry
+        # (pos % window) holds absolute position pos — decode continues the
+        # ring seamlessly
+        S = k.shape[1]
+        k = jnp.roll(k[:, -window:], (S - window) % window, axis=1)
+        v = jnp.roll(v[:, -window:], (S - window) % window, axis=1)
+    return out, {"k": k, "v": v}
+
+
+def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
+    """One-token decode.  x: [B,1,D]; pos: scalar int32 (tokens decoded so far).
+
+    Local layers use a ring-buffer cache of size `window` (write at
+    ``pos % window``); global layers write at ``pos``.
+    """
+    q, k_new, v_new = _qkv(cfg, p, x, x)
+    theta = cfg.rope_theta if not local else 10_000.0
+    pos_arr = pos[None] if pos.ndim == 0 else pos
+    q = rope(q, pos_arr, theta)
+    k_new = rope(k_new, pos_arr, theta)
+    S = cache["k"].shape[1]
+    widx = (pos % S) if (local and cfg.window_size) else pos
+    k = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                 (0, widx, 0, 0))
+    v = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                 (0, widx, 0, 0))
+    # validity mask: slot j valid iff it has been written (j <= pos when not
+    # yet wrapped; all valid once wrapped).  RoPE is pre-applied to cached
+    # keys, so scores need no position reconstruction.
+    j = jnp.arange(S)
+    valid = jnp.where(pos >= S, True, j <= pos)[None, None, None, None, :]
+    B, _, H, dq = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, 1, K, H // K, dq)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=F32)
+    s = s * (dq ** -0.5)
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    s = jnp.where(valid, s, NEG_INF)
+    s = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
+    o = o.reshape(B, 1, H, v.shape[-1])
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2 / MiniCPM3 style)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ArchConfig) -> dict:
+    D, H = cfg.d_model, cfg.padded_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((D, qr), ("embed", "lora")),
+        "q_norm": ParamSpec((qr,), (None,), "ones"),
+        "wq_b": ParamSpec((qr, H, dn + dr), ("lora", "heads", "qk")),
+        "wkv_a": ParamSpec((D, kvr + dr), ("embed", "lora")),
+        "kv_norm": ParamSpec((kvr,), (None,), "ones"),
+        "wkv_b": ParamSpec((kvr, H, dn + dv), ("lora", "heads", "qk")),
+        "wo": ParamSpec((H, dv, D), ("heads", "qk", "embed")),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_only(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cfg.compute_dtype)),
+                  p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cfg.compute_dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cfg.compute_dtype))
+    latent, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    latent = rms_only(latent, p["kv_norm"])
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return latent, k_rope  # [B,S,kvr], [B,S,dr]
+
+
+def mla_forward(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"].astype(cfg.compute_dtype))
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    H = k_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    o = attend(q, k, v, positions, positions, causal=(cfg.kind == "decoder"),
+               chunk=attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+
+
+def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    return {
+        "latent": ParamSpec((batch, seq, cfg.kv_lora_rank),
+                            ("batch", "kv_seq", "lora"), "zeros"),
+        "k_rope": ParamSpec((batch, seq, cfg.qk_rope_dim),
+                            ("batch", "kv_seq", None), "zeros"),
+    }
+
+
+def mla_prefill(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
+    out = mla_forward(cfg, p, x, positions, attn_chunk)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    return out, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
+    """Weight-absorbed MLA decode: attention runs in the latent space, so the
+    per-step cost is O(S * kv_lora_rank) instead of O(S * H * head_dim) —
+    the cached latent is never re-expanded.  (This is the paper's data-reuse
+    insight applied to the KV cache.)"""
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    pos_arr = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope = _mla_q(cfg, p, x, pos_arr)  # [B,1,H,dn],[B,1,H,dr]
+    latent_new, k_rope_new = _mla_latent(cfg, p, x, pos_arr)
+    latent = lax.dynamic_update_slice(cache["latent"],
+                                      latent_new.astype(cache["latent"].dtype),
+                                      (0, pos, 0))
+    k_rope = lax.dynamic_update_slice(cache["k_rope"],
+                                      k_rope_new.astype(cache["k_rope"].dtype),
+                                      (0, pos, 0))
+    wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
+    wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    s = jnp.einsum("bshr,btr->bhst", q_lat, latent, preferred_element_type=F32)
+    s = s + jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=F32)
+    s = s * ((dn + cfg.qk_rope_dim) ** -0.5)
+    S = latent.shape[1]
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    s = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", s.astype(latent.dtype), latent)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)  # expand to v space
+    out = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(cfg.compute_dtype))
+    return out, {"latent": latent, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention sub-block (Llama-3.2-Vision style)
+# ---------------------------------------------------------------------------
+
+def cross_attn_specs(cfg: ArchConfig) -> dict:
+    p = attn_specs(cfg)
+    p["gate"] = ParamSpec((), (), "zeros")  # tanh-gated residual
+    return p
+
+
+def cross_attn(cfg: ArchConfig, p: dict, x, img, img_kv=None):
+    """x: [B,S,D] text hidden; img: [B,T,D] projected image embeddings.
+    Returns (out, (k, v)) so decode can reuse the static cross KV."""
+    if img_kv is None:
+        k = jnp.einsum("btd,dhk->bthk", img, p["wk"].astype(cfg.compute_dtype))
+        v = jnp.einsum("btd,dhk->bthk", img, p["wv"].astype(cfg.compute_dtype))
+        if "q_norm" in p:
+            k = rms_only(k, p["k_norm"])
+    else:
+        k, v = img_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.compute_dtype))
+    if "q_norm" in p:
+        q = rms_only(q, p["q_norm"])
+    Sq, T = q.shape[1], k.shape[1]
+    o = attend(q, k, v, jnp.arange(Sq), jnp.arange(T), causal=False)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    return jnp.tanh(p["gate"].astype(F32)).astype(o.dtype) * o, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def ffn_kind(cfg: ArchConfig) -> str:
+    if cfg.name.startswith("gemma"):
+        return "geglu"
+    if cfg.family == "audio":
+        return "gelu_mlp"
+    return "swiglu"
+
+
+def ffn_specs(cfg: ArchConfig) -> dict:
+    D, Fdim = cfg.d_model, cfg.d_ff
+    if ffn_kind(cfg) == "gelu_mlp":
+        return {"w1": ParamSpec((D, Fdim), ("embed", "ffn")),
+                "b1": ParamSpec((Fdim,), ("ffn",), "zeros"),
+                "w2": ParamSpec((Fdim, D), ("ffn", "embed")),
+                "b2": ParamSpec((D,), ("embed",), "zeros")}
+    return {"w_gate": ParamSpec((D, Fdim), ("embed", "ffn")),
+            "w_up": ParamSpec((D, Fdim), ("embed", "ffn")),
+            "w_down": ParamSpec((Fdim, D), ("ffn", "embed"))}
+
+
+def ffn_forward(cfg: ArchConfig, p: dict, x):
+    dt = cfg.compute_dtype
+    kind = ffn_kind(cfg)
+    if kind == "gelu_mlp":
+        h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+        h = jax.nn.gelu(h)
+        return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt)) + p["b2"].astype(dt)
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    act = jax.nn.gelu(g, approximate=True) if kind == "geglu" else jax.nn.silu(g)
+    return jnp.einsum("bsf,fd->bsd", act * u, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — capacity-factor top-k dispatch (Switch-style), SPMD-friendly:
+# tokens grouped along the data axis, experts sharded along the model axis;
+# the group->expert reshard is the MoE all-to-all.
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    D, Fdim, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((D, E), ("embed", "experts"), "normal", jnp.float32),
+        "w_gate": ParamSpec((E, D, Fdim), ("experts", "embed", "ffn")),
+        "w_up": ParamSpec((E, D, Fdim), ("experts", "embed", "ffn")),
+        "w_down": ParamSpec((E, Fdim, D), ("experts", "ffn", "embed")),
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(4, _round_up(max(c, 1), 4))
+
+
+def _moe_expert_block(xt, wk3, idx3, sel3, pos3, wg, wu, wd, *, E_l: int,
+                      C: int, kk: int, dt, axis: str | None):
+    """Gather-dispatch + SwiGLU experts + gather-combine.
+
+    xt: [G,T,D] (replicated over the expert/model axis); wk3: [G,k,T] router
+    weights; idx3: [G,E_l,C] token-id+1 per slot (0 = empty); sel3/pos3:
+    [G,k,T] expert id / slot position per (choice, token); wg/wu/wd:
+    [E_l, D, F] local expert shard.  Runs inside shard_map(axis) (manual
+    expert axis, TPU) or plain (axis=None, E_l=E, CPU/auto).
+
+    Gather-only formulation: batched scatters of [T,D] update blocks
+    partition catastrophically under auto-SPMD (measured: 128 GiB u32
+    all-gathers on qwen3 — see EXPERIMENTS.md §Perf); batched gathers with
+    sharded index arrays stay local, and the combine gathers straight from
+    the expert-sharded [G,E,C+1,D] outputs so the partitioner can use
+    masked-gather + partial-sum instead of replicating the slot buffer."""
+    manual = axis is not None
+    base_e = (lax.axis_index(axis) * E_l) if axis else 0
+    G, T, D = xt.shape
+    gi = jnp.arange(G)[:, None]
+    gi3 = gi[:, :, None]
+
+    # dispatch: ein[g,e,c] = xt[g, idx3[g,e,c]-1] (slot 0 -> zero row).
+    # All gathers/scatters are vmapped over G so it becomes an HLO operand
+    # *batching* dim — indexing G explicitly puts it in the scatter index
+    # space, which XLA's partitioner cannot shard (measured: full-batch f32
+    # replication + 24 GiB all-gathers per layer; EXPERIMENTS.md §Perf).
+    xt_pad = jnp.concatenate([jnp.zeros((G, 1, D), dt), xt.astype(dt)], axis=1)
+    if not manual:  # fresh tensors lose the G(data) sharding: re-pin
+        xt_pad = constrain(xt_pad, ("batch", None, "embed"))
+    ein = jax.vmap(lambda xp, ix: xp[ix])(xt_pad, idx3)  # [G,E_l,C,D]
+    if not manual:
+        ein = constrain(ein, ("batch", "experts", None, "embed"))
+    g = jnp.einsum("gecd,edf->gecf", ein, wg.astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", ein, wu.astype(dt))
+    eout = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, wd.astype(dt))
+    if not manual:
+        eout = constrain(eout, ("batch", "experts", None, "embed"))
+    # combine: scatter-ADD each slot's output back to its token (idx3 is the
+    # slot->token map; row 0 is the trash row for empty slots).  Wire cost is
+    # one [G,T,D] partial-sum merge instead of replicating the full
+    # [G,E*C,D] slot buffer (16x fewer bytes at kimi-k2 scale).  Two earlier
+    # formulations measured worse — flat-slot gather from a replicated
+    # buffer (AG-bound) and (expert,slot)-pair gather (XLA replicates
+    # per-gather); see EXPERIMENTS.md §Perf.
+    wslot = jnp.zeros((G, E_l * C + 1), F32)
+    for j in range(kk):
+        e_j, p_j = sel3[:, j], pos3[:, j]
+        le = e_j - base_e
+        valid = (le >= 0) & (le < E_l) & (p_j < C)
+        lidx = jnp.where(valid, le * C + jnp.minimum(p_j, C - 1), E_l * C)
+        wslot = jax.vmap(lambda w, ix, u: w.at[ix].add(u))(
+            wslot, lidx, wk3[:, j].astype(F32))
+    weighted = eout.reshape(G, E_l * C, D) * \
+        wslot[:, : E_l * C, None].astype(dt)
+    out_pad = jnp.zeros((G, T + 1, D), dt)
+    if not manual:
+        out_pad = constrain(out_pad, ("batch", None, "embed"))
+    idx_flat = idx3.reshape(G, E_l * C)
+    out = jax.vmap(lambda op, ix, up: op.at[ix].add(up))(
+        out_pad, idx_flat, weighted)[:, 1:]
+    if not manual:
+        out = constrain(out, ("batch", None, "embed"))
+    if axis:
+        # f32 psum: the CPU AllReducePromotion pass check-fails on 16-bit
+        # all-reduces with non-add combiners (compiler bug); TPU unaffected.
+        out = lax.psum(out.astype(F32), axis).astype(dt)
+    return out
+
+
+def moe_forward(cfg: ArchConfig, p: dict, x):
+    """x: [B,S,D] -> [B,S,D].  Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    E, kk = cfg.num_experts, cfg.experts_per_token
+    G = max(1, min(cfg.num_moe_groups, B * S))
+    T = (B * S) // G
+    C = moe_capacity(cfg, T)
+    xt = constrain(x.reshape(G, T, D), ("batch", None, "embed"))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(F32), p["router"].astype(F32))
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = lax.top_k(probs, kk)  # [G,T,k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment with first-choice priority: exclusive cumsum over (k, t)
+    dt = cfg.compute_dtype
+    ohp = jax.nn.one_hot(topi.transpose(0, 2, 1).reshape(G, kk * T), E,
+                         dtype=jnp.int32)  # [G,kT,E] priority-major
+    ohp = constrain(ohp, ("batch", None, "experts"))
+    pos_all = jnp.cumsum(ohp, axis=1) - ohp  # exclusive, [G,kT,E]
+    chosen_pos = (pos_all * ohp).sum(-1)  # [G,kT] slot within chosen expert
+    sel = topi.transpose(0, 2, 1).reshape(G, kk * T)
+
+    gidx = jnp.where(chosen_pos < C, sel * C + chosen_pos, E * C)  # E*C=drop
+
+    # invert (token -> slot) into (slot -> token): tiny int32 scatter; the
+    # heavy data movement is then gather-only, O(T*k*D).  Both alternatives
+    # were measured and rejected (EXPERIMENTS.md §Perf): the one-hot dispatch
+    # einsum costs O(T*E*C*D) FLOPs (40x model flops at kimi-k2 scale) and
+    # batched [T,D]-block scatters replicate catastrophically under
+    # auto-SPMD (128 GiB u32 all-gathers on qwen3).
+    tok1 = jnp.tile(jnp.arange(1, T + 1, dtype=jnp.int32)[None], (1, kk))
+    tok_of_slot = constrain(jnp.zeros((G, E * C + 1), jnp.int32), ("batch", None))
+    tok_of_slot = jax.vmap(lambda t, ix, u: t.at[ix].set(u, mode="drop"))(
+        tok_of_slot, gidx, jnp.broadcast_to(tok1, (G, kk * T)))
+    idx3 = constrain(tok_of_slot[:, : E * C].reshape(G, E, C),
+                     ("batch", "experts", None))
+    sel3 = sel.reshape(G, kk, T)
+    pos3 = chosen_pos.reshape(G, kk, T)
+    wk3 = topw.transpose(0, 2, 1)  # [G,k,T]
+
+    dt = cfg.compute_dtype
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if cfg.moe_shard_map and mesh is not None and tp > 1 and E % tp == 0:
+        from jax.sharding import PartitionSpec as P
+        # ZeRO-3 boundary: explicitly all-gather the FSDP (data-axis) shards
+        # of the expert weights *before* the manual region — a data-sharded
+        # contraction inside shard_map would otherwise force a cross-data
+        # psum per expert GEMM (and trips an XLA CPU promotion-pass bug on
+        # the bf16 copy-combiner all-reduce it generates).
+        wg_, wu_, wd_ = (constrain(p[k], ("experts", None, None))
+                         for k in ("w_gate", "w_up", "w_down"))
+        fn = jax.shard_map(
+            functools.partial(_moe_expert_block, E_l=E // tp, C=C, kk=kk,
+                              dt=dt, axis="model"),
+            mesh=mesh, axis_names={"model"},
+            in_specs=(P(), P(), P(None, "model", None), P(), P(), P("model"),
+                      P("model"), P("model")),
+            out_specs=P())
+        out = fn(xt, wk3, idx3, sel3, pos3, wg_, wu_, wd_)
+    else:
+        out = _moe_expert_block(xt, wk3, idx3, sel3, pos3, p["w_gate"],
+                                p["w_up"], p["w_down"], E_l=E, C=C, kk=kk,
+                                dt=dt, axis=None)
+    out = constrain(out, ("batch", None, "embed"))
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))  # [E]
+    fe = ohp.reshape(G, kk, T, E).sum(1).astype(F32).mean(axis=(0, 1)) / kk
+    aux = E * jnp.sum(me * fe)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,341 @@
+"""Config-driven model assembly: param specs, forward, prefill, decode, loss.
+
+One code path serves all 10 assigned architectures; the :class:`ArchConfig`
+selects mixers (attention global/local, MLA, SSD, cross-attn) and FFNs
+(dense / MoE) per layer via the stage machinery, and the whole stack runs as
+``lax.scan`` over homogeneous layer groups (with configurable rematerialization)
+so 95-layer models lower to compact HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, LayerSpec, Stage
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssd as S
+from repro.models.params import ParamSpec, init_params, shape_tree, stack_tree
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    if spec.mixer == "ssm":
+        return S.ssd_specs(cfg)
+    if cfg.use_mla:
+        return L.mla_specs(cfg)
+    if spec.mixer == "cross":
+        return {"self": L.attn_specs(cfg), "cross": L.cross_attn_specs(cfg),
+                "norm_cross": L.norm_specs(cfg)}
+    return L.attn_specs(cfg)
+
+
+def _layer_param_specs(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    d = {"norm1": L.norm_specs(cfg), "mixer": _mixer_specs(cfg, spec)}
+    if spec.ffn == "dense":
+        d["norm2"] = L.norm_specs(cfg)
+        d["ffn"] = L.ffn_specs(cfg)
+    elif spec.ffn == "moe":
+        d["norm2"] = L.norm_specs(cfg)
+        d["ffn"] = L.moe_specs(cfg)
+    return d
+
+
+def param_specs(cfg: ArchConfig, main_repeats: int | None = None) -> dict:
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    tree: dict = {}
+    if cfg.audio_frontend:
+        tree["frontend_proj"] = ParamSpec((cfg.frontend_dim, D), ("frontend", "embed"))
+    tree["embed"] = ParamSpec((Vp, D), ("vocab", "embed"), "normal")
+    if cfg.vision_tokens:
+        tree["vision_proj"] = ParamSpec((cfg.vision_dim, D), ("frontend", "embed"))
+    stages = []
+    for stage in cfg.stages(main_repeats):
+        group = {str(i): _layer_param_specs(cfg, sp) for i, sp in enumerate(stage.group)}
+        stages.append(stack_tree(group, stage.repeats))
+    tree["stages"] = stages
+    tree["final_norm"] = L.norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((D, Vp), ("embed", "vocab"), "normal")
+    return tree
+
+
+def init(cfg: ArchConfig, rng) -> dict:
+    return init_params(param_specs(cfg), rng, cfg.param_dtype)
+
+
+def param_shapes(cfg: ArchConfig, main_repeats: int | None = None):
+    return shape_tree(param_specs(cfg, main_repeats), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_specs(cfg: ArchConfig, spec: LayerSpec, batch: int, seq: int):
+    if spec.mixer == "ssm":
+        return S.ssd_cache_specs(cfg, batch)
+    if cfg.use_mla:
+        return L.mla_cache_specs(cfg, batch, seq)
+    if spec.mixer == "cross":
+        c = L.attn_cache_specs(cfg, batch, seq, local=False)
+        K, dh, T = cfg.num_kv_heads, cfg.head_dim, cfg.vision_tokens
+        c["ck"] = ParamSpec((batch, T, K, dh), ("batch", None, "kv_heads", "qk"), "zeros")
+        c["cv"] = ParamSpec((batch, T, K, dh), ("batch", None, "kv_heads", "qk"), "zeros")
+        return c
+    return L.attn_cache_specs(cfg, batch, seq, local=(spec.mixer == "attn_local"))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int,
+                main_repeats: int | None = None) -> list:
+    out = []
+    for stage in cfg.stages(main_repeats):
+        group = {str(i): _layer_cache_specs(cfg, sp, batch, seq)
+                 for i, sp in enumerate(stage.group)}
+        out.append(stack_tree(group, stage.repeats))
+    return out
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int,
+                 main_repeats: int | None = None):
+    return shape_tree(cache_specs(cfg, batch, seq, main_repeats), cfg.compute_dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int):
+    tree = cache_specs(cfg, batch, seq)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
+                 img, mode: str, cache=None, pos=None, attn_chunk: int = 0):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), F32)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    new_cache = None
+    local = spec.mixer == "attn_local"
+    if spec.mixer == "ssm":
+        if mode == "decode":
+            m, new_cache = S.ssd_decode(cfg, p["mixer"], cache, h)
+        elif mode == "prefill":
+            m, new_cache = S.ssd_forward(cfg, p["mixer"], h, return_cache=True)
+        else:
+            m = S.ssd_forward(cfg, p["mixer"], h)
+    elif cfg.use_mla:
+        if mode == "decode":
+            m, new_cache = L.mla_decode(cfg, p["mixer"], cache, h, pos)
+        elif mode == "prefill":
+            m, new_cache = L.mla_prefill(cfg, p["mixer"], h, positions, attn_chunk)
+        else:
+            m = L.mla_forward(cfg, p["mixer"], h, positions, attn_chunk)
+    elif spec.mixer == "cross":
+        mp = p["mixer"]
+        if mode == "decode":
+            m, sc = L.attn_decode(cfg, mp["self"], {"k": cache["k"], "v": cache["v"]},
+                                  h, pos, local=False)
+        elif mode == "prefill":
+            m, sc = L.attn_prefill(cfg, mp["self"], h, positions, local=False,
+                                   attn_chunk=attn_chunk)
+        else:
+            m = L.attn_forward(cfg, mp["self"], h, positions, local=False,
+                               attn_chunk=attn_chunk)
+            sc = None
+        x = x + m
+        hc = L.apply_norm(cfg, mp["norm_cross"], x)
+        img_kv = (cache["ck"], cache["cv"]) if mode == "decode" else None
+        mc, (ck, cv) = L.cross_attn(cfg, mp["cross"], hc, img, img_kv)
+        if mode in ("decode", "prefill"):
+            new_cache = dict(sc, ck=ck, cv=cv)
+        m = mc  # residual added below
+    else:
+        if mode == "decode":
+            m, new_cache = L.attn_decode(cfg, p["mixer"], cache, h, pos, local=local)
+        elif mode == "prefill":
+            m, new_cache = L.attn_prefill(cfg, p["mixer"], h, positions, local=local,
+                                          attn_chunk=attn_chunk)
+        else:
+            m = L.attn_forward(cfg, p["mixer"], h, positions, local=local,
+                               attn_chunk=attn_chunk)
+    x = x + m
+    if spec.ffn != "none":
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if spec.ffn == "moe":
+            f, aux = L.moe_forward(cfg, p["ffn"], h)
+        else:
+            f = L.ffn_forward(cfg, p["ffn"], h)
+        x = x + f
+    return x, new_cache, aux
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    if cfg.remat_policy == "dots_nb":
+        # save weight-activation GEMM outputs, recompute batched einsums
+        # (attention scores) — the memory/recompute sweet spot at depth
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
+                 mode: str, caches=None, pos=None, attn_chunk: int = 0,
+                 aux0=None):
+    """Scan `stage.repeats` iterations of the layer group."""
+    group = stage.group
+
+    def body(carry, xs):
+        xc, aux = carry
+        xc = constrain(xc, ("batch", "seq", "embed"))  # pin the residual stream
+        lp, lc = xs
+        new_caches = {}
+        for gi, spec in enumerate(group):
+            c_in = None if lc is None else lc[str(gi)]
+            xc, nc, a = _apply_layer(cfg, spec, lp[str(gi)], xc,
+                                     positions=positions, img=img, mode=mode,
+                                     cache=c_in, pos=pos, attn_chunk=attn_chunk)
+            if nc is not None:
+                new_caches[str(gi)] = nc
+            aux = aux + a
+        ys = new_caches if new_caches else None
+        return (xc, aux), ys
+
+    if mode == "train":
+        body = _remat(cfg, body)
+    xs = (sp, caches)
+    if cfg.scan_layers:
+        (x, aux), ys = lax.scan(body, (x, aux0), xs)
+        return x, aux, ys
+    # unrolled path: identical math, no `while` in HLO — used by the roofline
+    # cost compiles, where XLA's cost analysis counts a scan body only once.
+    aux = aux0
+    ys_list = []
+    for r in range(stage.repeats):
+        xs_r = jax.tree.map(lambda a: a[r], xs)
+        (x, aux), ys_r = body((x, aux), xs_r)
+        ys_list.append(ys_r)
+    if ys_list and ys_list[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        ys = None
+    return x, aux, ys
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ArchConfig, params, tokens):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return x
+
+
+def embed_inputs(cfg: ArchConfig, params, batch: dict):
+    if cfg.audio_frontend:
+        return jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cfg.compute_dtype),
+                          params["frontend_proj"].astype(cfg.compute_dtype))
+    return embed_tokens(cfg, params, batch["tokens"])
+
+
+def project_images(cfg: ArchConfig, params, batch: dict):
+    if not cfg.vision_tokens or "images" not in batch:
+        return None
+    return jnp.einsum("btf,fd->btd", batch["images"].astype(cfg.compute_dtype),
+                      params["vision_proj"].astype(cfg.compute_dtype))
+
+
+def lm_logits(cfg: ArchConfig, params, hidden):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", hidden, head.astype(cfg.compute_dtype))
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
+                   caches=None, pos=None, attn_chunk: int = 0,
+                   main_repeats: int | None = None):
+    """Run the stack; returns (hidden, aux_loss, new_caches_per_stage)."""
+    x = embed_inputs(cfg, params, batch)
+    x = constrain(x, ("batch", "seq", "embed"))
+    img = project_images(cfg, params, batch)
+    seqlen = x.shape[1]
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.arange(seqlen, dtype=jnp.int32)
+    aux = jnp.zeros((), F32)
+    new_caches = []
+    for si, stage in enumerate(cfg.stages(main_repeats)):
+        c = None if caches is None else caches[si]
+        x, aux, ys = _apply_stage(cfg, stage, params["stages"][si], x,
+                                  positions=positions, img=img, mode=mode,
+                                  caches=c, pos=pos, attn_chunk=attn_chunk,
+                                  aux0=aux)
+        new_caches.append(ys)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux, (new_caches if mode in ("prefill", "decode") else None)
+
+
+def cross_entropy(cfg: ArchConfig, logits, labels):
+    """Masked CE over the padded vocab.  logits: [B,S,Vp] (any float dtype)."""
+    lf = logits.astype(F32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        col = jnp.arange(cfg.padded_vocab)
+        lf = jnp.where(col[None, None, :] < cfg.vocab_size, lf, L.NEG_INF)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
+            main_repeats: int | None = None):
+    hidden, aux, _ = forward_hidden(cfg, params, batch, mode="train",
+                                    attn_chunk=attn_chunk,
+                                    main_repeats=main_repeats)
+    logits = lm_logits(cfg, params, hidden)
+    ce = cross_entropy(cfg, logits, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
+            main_repeats: int | None = None):
+    """Returns (last-token logits, caches)."""
+    hidden, _, caches = forward_hidden(cfg, params, batch, mode="prefill",
+                                       attn_chunk=attn_chunk,
+                                       main_repeats=main_repeats)
+    logits = lm_logits(cfg, params, hidden[:, -1:])
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, token, pos, *,
+                main_repeats: int | None = None):
+    """One-token decode.  token: [B,1] int32; pos: scalar int32."""
+    batch = {"tokens": token}
+    hidden, _, new_caches = forward_hidden(cfg, params, batch, mode="decode",
+                                           caches=caches, pos=pos,
+                                           main_repeats=main_repeats)
+    logits = lm_logits(cfg, params, hidden)
+    return logits, new_caches

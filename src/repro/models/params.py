@@ -1,0 +1,86 @@
+"""Parameter declaration system.
+
+Models declare their parameters once as a pytree of :class:`ParamSpec`
+(shape + logical axes + init kind).  From that single source of truth we
+derive:
+
+- ``init_params``      — materialized, deterministically-initialized arrays
+- ``shape_tree``       — ``jax.ShapeDtypeStruct`` stand-ins (dry-run, no alloc)
+- ``pspec_tree``       — ``PartitionSpec`` per param via the sharding rules
+
+Logical axis names (see ``repro.launch.sharding`` for the mesh mapping):
+``vocab embed ffn heads kv_heads qk lora experts state conv layers frontend``
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "scaled"  # scaled | normal | zeros | ones | ssm_a | dt_bias
+    dtype: Any = None  # None -> model param_dtype
+
+    def stacked(self, n: int, axis_name: str = "layers") -> "ParamSpec":
+        return ParamSpec((n,) + tuple(self.shape), (axis_name,) + tuple(self.axes),
+                         self.init, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key, default_dtype):
+    dtype = spec.dtype or default_dtype
+    shape = tuple(int(s) for s in spec.shape)
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "ssm_a":  # A_log ~ log(Uniform[1, 16])
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":  # inverse-softplus of Uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    # "scaled": truncated-normal-ish with 1/sqrt(fan_in); fan_in = product of
+    # all dims except the last (the output dim convention used throughout).
+    fan_in = max(1, math.prod(shape[:-1]))
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_params(spec_tree, rng, default_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(_init_leaf(spec, jax.random.fold_in(rng, i), default_dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(spec_tree, default_dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(tuple(int(d) for d in s.shape),
+                                       s.dtype or default_dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: tuple(s.axes), spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def stack_tree(spec_tree, n: int, axis_name: str = "layers"):
+    return jax.tree.map(lambda s: s.stacked(n, axis_name), spec_tree, is_leaf=is_spec)

@@ -1,0 +1,194 @@
+"""Mamba-2 SSD (state-space duality) block — pure-JAX reference.
+
+The chunked SSD algorithm re-expresses the selective-SSM recurrence as
+block-diagonal GEMMs (intra-chunk) plus a tiny inter-chunk recurrence — i.e.
+it is the paper's block-wise GEMM insight applied to SSMs, which is why we use
+it (TPU MXU-friendly) for both mamba2-130m and the Jamba hybrid.
+
+Layout: d_inner = expand * d_model, H = d_inner / headdim SSD heads of head
+dim P, shared (n_groups=1) B/C of state dim N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+F32 = jnp.float32
+
+
+def ssd_specs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    return {
+        "w_z": ParamSpec((D, H, P), ("embed", "heads", "qk")),
+        "w_x": ParamSpec((D, H, P), ("embed", "heads", "qk")),
+        "w_B": ParamSpec((D, N), ("embed", "state")),
+        "w_C": ParamSpec((D, N), ("embed", "state")),
+        "w_dt": ParamSpec((D, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), "dt_bias", jnp.float32),
+        "A_log": ParamSpec((H,), ("heads",), "ssm_a", jnp.float32),
+        "D_skip": ParamSpec((H,), ("heads",), "ones", jnp.float32),
+        "conv_x": ParamSpec((W, H, P), ("conv", "heads", "qk"), "normal"),
+        "conv_B": ParamSpec((W, N), ("conv", "state"), "normal"),
+        "conv_C": ParamSpec((W, N), ("conv", "state"), "normal"),
+        "norm": ParamSpec((H, P), ("heads", "qk"), "ones"),
+        "w_out": ParamSpec((H, P, D), ("heads", "qk", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv via shifted adds.  x: [B,S,...ch], w: [W,...ch].
+    If `state` ([B, W-1, ...ch]) is given, it prefixes x (decode streaming);
+    returns (y, new_state)."""
+    Wd = w.shape[0]
+    if state is not None:
+        x = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(
+        jnp.pad(x, [(0, 0), (Wd - 1 - j, 0)] + [(0, 0)] * (x.ndim - 2))[:, : S]
+        * w[j]
+        for j in range(Wd)
+    )
+    out = y if state is None else y[:, Wd - 1 :]
+    new_state = x[:, -(Wd - 1) :] if Wd > 1 else None
+    return out, new_state
+
+
+def _segsum(x):
+    """x: [..., Q] -> lower-triangular cumulative segment sums [..., Q, Q]."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _proj_inputs(cfg, p, x):
+    dt_ = cfg.compute_dtype
+    z = jnp.einsum("bsd,dhp->bshp", x, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["w_x"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_forward(cfg: ArchConfig, p: dict, x, return_cache: bool = False):
+    """x: [B,S,D] -> [B,S,D].  S must be a multiple of ssm_chunk (or smaller).
+    With ``return_cache``, also returns the streaming state for decode."""
+    B_, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:  # largest chunk that divides S (zero-padding would corrupt
+        Q -= 1    # the decayed final state)
+    nc = S // Q
+    W = cfg.ssm_conv_width
+
+    z, xs, Bm, Cm, dt = _proj_inputs(cfg, p, x)
+    conv_tails = None
+    if return_cache:  # raw pre-conv tails, matching the decode streaming conv
+        conv_tails = (xs[:, -(W - 1):], Bm[:, -(W - 1):], Cm[:, -(W - 1):])
+    xs, _ = _causal_conv(xs, p["conv_x"].astype(xs.dtype))
+    Bm, _ = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm, _ = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(F32))  # [H]
+
+    # chunk
+    xc = xs.reshape(B_, nc, Q, H, P)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+    dtc = dt.reshape(B_, nc, Q, H)
+    dA = dtc * A  # [B,nc,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    xdt = xc * dtc[..., None].astype(xc.dtype)
+
+    # intra-chunk (block-diagonal GEMMs)
+    L = jnp.exp(_segsum(dA.transpose(0, 3, 1, 2)))  # [B,H,nc,Q,Q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc.astype(F32), Bc.astype(F32), L,
+                        xdt.astype(F32))
+
+    # chunk-final states
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [B,nc,Q,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                        Bc.astype(F32), decay, xdt.astype(F32))
+
+    # inter-chunk recurrence (tiny sequential scan over nc)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [B,nc,H]
+
+    def step(h, inp):
+        s, d = inp  # s: [B,H,P,N], d: [B,H]
+        h_new = h * d[..., None, None] + s
+        return h_new, h
+
+    init = jnp.zeros((B_, H, P, N), F32)
+    h_final, h_prev = lax.scan(step, init,
+                               (states.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering chunk
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(dA_cs)  # [B,nc,Q,H]
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc.astype(F32), in_decay, h_prev)
+
+    y = (y_diag + y_off).astype(cfg.compute_dtype)
+    y = y + xc * p["D_skip"].astype(cfg.compute_dtype)[:, None]
+    y = y.reshape(B_, S, H, P)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm over (H,P)
+    yf = y.astype(F32)
+    yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=(-2, -1), keepdims=True) + 1e-6)
+    y = (yf * p["norm"].astype(F32)).astype(cfg.compute_dtype)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype))
+    if return_cache:
+        cx, cB, cC = conv_tails
+        return out, {"h": h_final, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# streaming (decode) path
+# ---------------------------------------------------------------------------
+
+def ssd_cache_specs(cfg: ArchConfig, batch: int) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    return {
+        "h": ParamSpec((batch, H, P, N), ("batch", "heads", "qk", "state"),
+                       "zeros", jnp.float32),
+        "conv_x": ParamSpec((batch, W - 1, H, P), ("batch", "conv", "heads", "qk"), "zeros"),
+        "conv_B": ParamSpec((batch, W - 1, N), ("batch", "conv", "state"), "zeros"),
+        "conv_C": ParamSpec((batch, W - 1, N), ("batch", "conv", "state"), "zeros"),
+    }
+
+
+def ssd_decode(cfg: ArchConfig, p: dict, cache: dict, x):
+    """Single-token state update.  x: [B,1,D]."""
+    z, xs, Bm, Cm, dt = _proj_inputs(cfg, p, x)
+    xs, cx = _causal_conv(xs, p["conv_x"].astype(xs.dtype), cache["conv_x"])
+    Bm, cB = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype), cache["conv_B"])
+    Cm, cC = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype), cache["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(F32))
+    dA = jnp.exp(dt * A)  # [B,H]
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm[:, 0].astype(F32), dt, xs[:, 0].astype(F32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), h)
+    y = y + xs[:, 0].astype(F32) * p["D_skip"].astype(F32)[:, None]
+    y = y[:, None].astype(cfg.compute_dtype) * jax.nn.silu(z)
+    yf = y.astype(F32)
+    yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=(-2, -1), keepdims=True) + 1e-6)
+    y = (yf * p["norm"].astype(F32)).astype(cfg.compute_dtype)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype))
+    return out, {"h": h, "conv_x": cx, "conv_B": cB, "conv_C": cC}

@@ -1,0 +1,1 @@
+from repro.runtime.ft import FailureInjector, RunReport, StragglerMonitor, TrainRunner  # noqa: F401

@@ -1,0 +1,131 @@
+"""Fault tolerance & elasticity runtime.
+
+Production posture for 1000+ nodes (see DESIGN.md §7), with every code path
+exercisable on this single-host container:
+
+- ``TrainRunner``: checkpoint-every-N, auto-resume-from-latest, per-step
+  wall-time EWMA straggler monitor, failure capture -> restart-from-
+  checkpoint (tested via injected failures in tests/test_runtime.py).
+- Elasticity: because checkpoints store logical arrays and the data pipeline
+  is a pure function of (seed, step), a restore onto a *different* mesh/DP
+  degree resumes the exact token stream (tested: save at dp=4, restore dp=2).
+- On a real pod the same hooks wire to health RPCs: `on_step` -> heartbeat,
+  `StragglerMonitor.flag` -> replica eviction + elastic re-mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA step-time monitor: flags steps slower than `threshold` x EWMA.
+    At pod scale the flagged replica is evicted and the mesh rebuilt; here
+    the flag is surfaced to the runner (and tested with injected delays)."""
+    alpha: float = 0.1
+    threshold: float = 3.0
+    warmup: int = 3
+    ewma: float = 0.0
+    count: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            self.ewma = dt if self.ewma == 0 else 0.5 * (self.ewma + dt)
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append((step, dt, self.ewma))
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class FailureInjector:
+    """Deterministic failure injection for tests: raises at given steps."""
+
+    def __init__(self, fail_at: set[int] | None = None):
+        self.fail_at = set(fail_at or ())
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclass
+class RunReport:
+    steps_run: int = 0
+    restarts: int = 0
+    final_step: int = 0
+    losses: list = field(default_factory=list)
+    straggler_flags: int = 0
+
+
+class TrainRunner:
+    """Checkpointed training loop with automatic restart-from-latest.
+
+    `train_step(state, batch) -> (state, metrics)` and `batch_fn(step)` are
+    pure; all restart state lives in the checkpoint + step index.
+    """
+
+    def __init__(self, train_step: Callable, batch_fn: Callable,
+                 ckpt: CheckpointManager, *, ckpt_every: int = 10,
+                 monitor: StragglerMonitor | None = None,
+                 injector: FailureInjector | None = None,
+                 max_restarts: int = 3):
+        self.train_step = train_step
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor or StragglerMonitor()
+        self.injector = injector
+        self.max_restarts = max_restarts
+
+    def _resume(self, init_state):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return init_state, 0
+        state = self.ckpt.restore(latest, init_state)
+        return state, latest
+
+    def run(self, init_state, total_steps: int) -> tuple[Any, RunReport]:
+        report = RunReport()
+        restarts = 0
+        while True:
+            state, start = self._resume(init_state)
+            try:
+                for step in range(start, total_steps):
+                    if self.injector is not None:
+                        self.injector.maybe_fail(step)
+                    t0 = time.time()
+                    state, metrics = self.train_step(state, self.batch_fn(step))
+                    loss = metrics.get("loss")
+                    if loss is not None:
+                        loss = float(loss)
+                        if not np.isfinite(loss):
+                            raise FloatingPointError(f"non-finite loss at {step}")
+                        report.losses.append(loss)
+                    if self.monitor.observe(step, time.time() - t0):
+                        report.straggler_flags += 1
+                    report.steps_run += 1
+                    if (step + 1) % self.ckpt_every == 0 or step + 1 == total_steps:
+                        self.ckpt.save(step + 1, state)
+                self.ckpt.wait()
+                report.restarts = restarts
+                report.final_step = total_steps
+                return state, report
+            except (RuntimeError, FloatingPointError) as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()  # make sure the last save committed

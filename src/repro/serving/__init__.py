@@ -1,0 +1,1 @@
+from repro.serving.engine import Engine, grow_cache  # noqa: F401

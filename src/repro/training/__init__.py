@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_moments, schedule  # noqa: F401
+from repro.training.step import TrainState, init_state, make_eval_step, make_train_step, state_shapes  # noqa: F401

@@ -1,0 +1,121 @@
+"""AdamW (from scratch — no optax in this environment) with:
+
+- linear-warmup + cosine-decay schedule
+- global-norm gradient clipping
+- decoupled weight decay
+- optional 8-bit (int8 block-quantized) first/second moments, which shards
+  the optimizer footprint of trillion-parameter configs (kimi-k2) to
+  something a v5e pod can hold (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, dequantize, quantize
+
+F32 = jnp.float32
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moments_dtype: str = "f32"  # f32 | bf16 | int8
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(F32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _encode_moment(x, kind: str):
+    if kind == "int8":
+        return quantize(x, axis=-1)
+    if kind == "bf16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def _decode_moment(x, kind: str):
+    if kind == "int8":
+        return dequantize(x)
+    return x.astype(F32) if kind == "bf16" else x
+
+
+def init_moments(params, cfg: AdamWConfig):
+    def zeros_like(p):
+        z = jnp.zeros(p.shape, F32)
+        return _encode_moment(z, cfg.moments_dtype)
+    mu = jax.tree.map(zeros_like, params)
+    nu = jax.tree.map(zeros_like, params)
+    return mu, nu
+
+
+def moment_shapes(param_shapes, cfg: AdamWConfig):
+    """ShapeDtypeStruct tree for the moments (dry-run)."""
+    def conv(p):
+        if cfg.moments_dtype == "int8":
+            scale_shape = tuple(p.shape[:-1]) + (1,) if p.shape else ()
+            return QTensor(jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                           jax.ShapeDtypeStruct(scale_shape or (1,), F32))
+        dt = jnp.bfloat16 if cfg.moments_dtype == "bf16" else F32
+        return jax.ShapeDtypeStruct(p.shape, dt)
+    return jax.tree.map(conv, param_shapes), jax.tree.map(conv, param_shapes)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, mu, nu, step):
+    """Returns (new_params, new_mu, new_nu, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(F32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    md = cfg.moments_dtype
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32) * scale
+        mf = _decode_moment(m, md)
+        vf = _decode_moment(v, md)
+        mf = b1 * mf + (1 - b1) * gf
+        vf = b2 * vf + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        newp = (p.astype(F32) - lr * delta).astype(p.dtype)
+        return newp, _encode_moment(mf, md), _encode_moment(vf, md)
+
+    is_q = lambda x: isinstance(x, QTensor)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(mu, is_leaf=is_q)
+    flat_v = jax.tree.leaves(nu, is_leaf=is_q)
+    trip = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [t[0] for t in trip])
+    new_m = jax.tree.unflatten(tdef, [t[1] for t in trip])
+    new_v = jax.tree.unflatten(tdef, [t[2] for t in trip])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, new_m, new_v, metrics

@@ -1,0 +1,154 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
+from repro.core.quant import dequantize, quantize
+from repro.kernels import ref
+from repro.kernels.block_gemm import block_gemm, block_gemm_int8
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import cgra_matmul
+
+RNG = np.random.RandomState(0)
+
+
+# ---------------------------------------------------------------------------
+# block GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 384),
+                                   (200, 150, 330), (64, 300, 72), (8, 8, 8)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_block_gemm_matches_oracle(shape, dtype):
+    M, K, N = shape
+    a = jnp.asarray(RNG.randn(M, K), dtype)
+    b = jnp.asarray(RNG.randn(K, N), dtype)
+    out = block_gemm(a, b, block_shape=(128, 128, 128), interpret=True)
+    want = ref.block_gemm_ref(a, b)
+    atol = 1e-3 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("block", [(128, 128, 128), (256, 128, 128)])
+def test_block_gemm_block_shapes(block):
+    a = jnp.asarray(RNG.randn(256, 256), jnp.float32)
+    b = jnp.asarray(RNG.randn(256, 256), jnp.float32)
+    out = block_gemm(a, b, block_shape=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (200, 300, 170)])
+def test_block_gemm_int8(shape):
+    M, K, N = shape
+    a = RNG.randn(M, K).astype(np.float32)
+    b = RNG.randn(K, N).astype(np.float32)
+    aq = quantize(jnp.asarray(a), axis=0)
+    bq = quantize(jnp.asarray(b), axis=-1)
+    out = block_gemm_int8(aq.q, bq.q, aq.scale, bq.scale.reshape(1, -1),
+                          block_shape=(128, 128, 128), interpret=True)
+    want = ref.block_gemm_int8_ref(aq.q, bq.q, aq.scale, bq.scale.reshape(1, -1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-3)
+    # quantization itself is accurate to ~1%
+    rel = np.abs(np.asarray(out) - a @ b) / (np.abs(a @ b) + 1.0)
+    assert np.median(rel) < 0.05
+
+
+def test_block_gemm_custom_vjp():
+    a = jnp.asarray(RNG.randn(128, 128), jnp.float32)
+    b = jnp.asarray(RNG.randn(128, 128), jnp.float32)
+    ga, gb = jax.grad(lambda x, y: cgra_matmul(x, y, "interpret").sum(), (0, 1))(a, b)
+    ga_r, gb_r = jax.grad(lambda x, y: (x @ y).sum(), (0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_r), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_r), atol=1e-3)
+
+
+def test_cgra_gemm_batched():
+    x = jnp.asarray(RNG.randn(4, 32, 64), jnp.float32)
+    w = jnp.asarray(RNG.randn(64, 48), jnp.float32)
+    np.testing.assert_allclose(np.asarray(cgra_gemm(x, w)),
+                               np.asarray(x @ w), atol=1e-4)
+
+
+def test_w8a8_interpret_vs_reference():
+    x = jnp.asarray(RNG.randn(100, 160), jnp.float32)
+    w = quantize(jnp.asarray(RNG.randn(160, 90), jnp.float32), axis=-1)
+    a = cgra_gemm_w8a8(x, w, mode="interpret")
+    b = cgra_gemm_w8a8(x, w, mode="reference")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,D,causal,window", [
+    (2, 4, 4, 256, 64, True, 0),
+    (1, 8, 2, 256, 64, True, 0),   # GQA 4:1
+    (2, 4, 2, 256, 64, True, 64),  # sliding window
+    (1, 4, 4, 128, 64, False, 0),  # bidirectional (encoder)
+    (1, 4, 1, 128, 32, True, 0),   # MQA
+])
+def test_flash_attention_matches_oracle(B, H, K, S, D, causal, window):
+    q = jnp.asarray(RNG.randn(B, H, S, D) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, K, S, D) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, K, S, D) * 0.3, jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    G = H // K
+    want = ref.flash_attention_ref(q, jnp.repeat(k, G, 1), jnp.repeat(v, G, 1),
+                                   causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jnp.asarray(RNG.randn(1, 2, 128, 64) * 0.3, dtype)
+    k = jnp.asarray(RNG.randn(1, 2, 128, 64) * 0.3, dtype)
+    v = jnp.asarray(RNG.randn(1, 2, 128, 64) * 0.3, dtype)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64))
+def test_prop_block_gemm_any_shape(m, k, n):
+    """Padding handles every shape; result == jnp matmul."""
+    a = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    b = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    out = block_gemm(a, b, block_shape=(32, 32, 32), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 40), cols=st.integers(1, 40))
+def test_prop_quant_roundtrip_bound(rows, cols):
+    """|dequant(quant(x)) - x| <= amax/127 per channel (symmetric int8)."""
+    x = jnp.asarray(RNG.randn(rows, cols), jnp.float32)
+    qt = quantize(x, axis=-1)
+    back = dequantize(qt)
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=0, keepdims=True)) / 127.0
+    assert np.all(np.abs(np.asarray(back - x)) <= bound + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([64, 128, 192]), w=st.sampled_from([0, 32, 64]))
+def test_prop_flash_attention_window(s, w):
+    q = jnp.asarray(RNG.randn(1, 2, s, 32) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 2, s, 32) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 2, s, 32) * 0.3, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=w, bq=32, bk=32,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-3)

@@ -1,0 +1,90 @@
+"""MoE dispatch correctness against a dense every-expert reference, drop
+behaviour, and SPMD notes.
+
+(The expert-sharded shard_map path is flag-gated off on CPU: XLA's CPU
+AllReducePromotion pass check-fails cloning the copy-combiner all-reduce its
+partitioner emits for auto-axis contractions inside manual regions.  Minimal
+repro: shard_map{scatter-set + einsum over an FSDP-sharded dim} under
+jax.checkpoint.  TPU backends are unaffected; cfg.moe_shard_map enables it.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_config
+from repro.models import layers as L
+from repro.models.params import init_params
+
+
+def setup(E=4, k=2, D=16, F=8, cf=4.0, groups=2, seed=0):
+    cfg = reduce_config(get_config("qwen3-moe-30b-a3b")).with_(
+        num_experts=E, experts_per_token=k, d_model=D, moe_d_ff=F,
+        capacity_factor=cf, num_moe_groups=groups)
+    p = init_params(L.moe_specs(cfg), jax.random.PRNGKey(seed), jnp.float32)
+    return cfg, p
+
+
+def dense_reference(cfg, p, x):
+    xt = x.reshape(-1, cfg.d_model)
+    probs = jax.nn.softmax(xt @ p["router"], -1)
+    topw, topi = jax.lax.top_k(probs, cfg.experts_per_token)
+    topw = topw / topw.sum(-1, keepdims=True)
+    ref = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = int(topi[t, j])
+            v = xt[t]
+            y = (jax.nn.silu(v @ p["w_gate"][e]) * (v @ p["w_up"][e])) @ p["w_down"][e]
+            ref[t] += float(topw[t, j]) * np.asarray(y)
+    return ref.reshape(x.shape)
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_moe_matches_dense_reference(groups):
+    cfg, p = setup(groups=groups)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    out, aux = L.moe_forward(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(out), dense_reference(cfg, p, x),
+                               atol=1e-4)
+    assert float(aux) > 0.9  # balanced aux loss ~= 1 for near-uniform routing
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity some tokens must be dropped (output -> partial)."""
+    cfg, p = setup(cf=0.1)
+    cfg = cfg.with_(capacity_factor=0.01)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    out, _ = L.moe_forward(cfg, p, x)
+    dense = dense_reference(cfg, p, x)
+    # dropped tokens produce strictly smaller-norm outputs; ensure no NaNs and
+    # that at least one token was dropped (outputs differ)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.abs(np.asarray(out) - dense).max() > 1e-4
+
+
+def test_moe_gradients_flow_to_all_param_kinds():
+    cfg, p = setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+
+    def loss(p):
+        out, aux = L.moe_forward(cfg, p, x)
+        return (out ** 2).sum() + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for k, v in g.items():
+        assert np.isfinite(np.asarray(v, np.float32)).all(), k
+        assert float(jnp.abs(v.astype(jnp.float32)).sum()) > 0, f"no grad: {k}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_prop_moe_first_choice_never_dropped_at_cf1(seed):
+    """With capacity_factor >= k and one group, priority slots cover all
+    first choices: the top-1 expert contribution is always present."""
+    cfg, p = setup(E=4, k=1, cf=4.0, groups=1, seed=seed % 3)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, cfg.d_model), jnp.float32)
+    out, _ = L.moe_forward(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(out), dense_reference(cfg, p, x),
+                               atol=1e-4)
