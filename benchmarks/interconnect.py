@@ -19,12 +19,15 @@ _POD_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np, re
-    from jax import shard_map
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:  # newer jax moved it to the top level
+        from jax import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import torus
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
     T, D, F = 1024, 512, 2048
     x = jax.ShapeDtypeStruct((T, D), jnp.bfloat16)
     w = jax.ShapeDtypeStruct((D, F), jnp.bfloat16)

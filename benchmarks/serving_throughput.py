@@ -1,0 +1,149 @@
+"""E7: serving throughput — continuous-batching scan engine vs the seed
+per-token Python loop.
+
+Workload: a mixed-prompt-length batch of requests under a Poisson arrival
+process (streamed into the engine as slots free up), plus a closed all-at-once
+batch for the head-to-head tokens/s comparison against the seed-style loop
+(one fixed batch, Python `for` over decode steps, `grow_cache` padding).
+
+Reported: tokens/s for both paths, speedup, and p50/p99 request latency under
+the streaming workload.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--arch olmo-1b]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.serving.engine import (Engine, ServeStats, bytes_tokenizer_encode,
+                                  grow_cache)
+
+MAX_NEW = 32
+N_REQUESTS = 8
+
+
+def make_workload(cfg, n=N_REQUESTS, seed=0):
+    """Mixed prompt lengths, 4..70 bytes."""
+    rng = np.random.RandomState(seed)
+    return [bytes_tokenizer_encode(f"req {i}: " + "lorem " * rng.randint(1, 12),
+                                   cfg.vocab_size) for i in range(n)]
+
+
+def seed_generate(cfg, params, prompts, max_new=MAX_NEW):
+    """The seed engine's decode path: one fixed batch, prefill, grow_cache,
+    then a Python loop dispatching one compiled step per token."""
+    dec = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+    pre = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+    B = len(prompts)
+    plen = max(len(p) for p in prompts)
+    toks = np.zeros((B, plen), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, plen - len(p):] = p
+    stats = ServeStats()
+    t0 = time.time()
+    logits, caches = pre(params, {"tokens": jnp.asarray(toks)})
+    caches = grow_cache(cfg, caches, plen + max_new)
+    jax.block_until_ready(caches)
+    stats.prefill_s = time.time() - t0
+    out = [list(p) for p in prompts]
+    cur = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1).astype(jnp.int32)
+    t0 = time.time()
+    for step in range(max_new):
+        for i in range(B):
+            out[i].append(int(cur[i]))
+        if step < max_new - 1:
+            logits, caches = dec(params, caches, cur[:, None],
+                                 jnp.int32(plen + step))
+            cur = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1).astype(jnp.int32)
+    stats.decode_s = time.time() - t0
+    stats.tokens_out = B * max_new
+    return out, stats
+
+
+def bench_closed_batch(cfg, params, prompts):
+    """Head-to-head: same 8 requests, all present at t=0."""
+    # warm both paths (compile), then time a fresh run
+    seed_generate(cfg, params, prompts)
+    t0 = time.time()
+    _, seed_stats = seed_generate(cfg, params, prompts)
+    seed_wall = time.time() - t0
+
+    eng = Engine(cfg, params, max_len=256, max_slots=len(prompts),
+                 prefill_bucket=32, decode_chunk=8)
+    eng.generate(prompts, max_new=MAX_NEW)  # warm (compile)
+    t0 = time.time()
+    _, cb_stats = eng.generate(prompts, max_new=MAX_NEW)  # per-call deltas
+    cb_wall = time.time() - t0
+    return seed_stats, seed_wall, cb_stats, cb_wall
+
+
+def bench_streaming(cfg, params, prompts, rate=4.0):
+    """Poisson arrivals at `rate` req/s through a 4-slot engine."""
+    rng = np.random.RandomState(1)
+    eng = Engine(cfg, params, max_len=256, max_slots=4, prefill_bucket=32,
+                 decode_chunk=8)
+    eng.generate(prompts[:4], max_new=4)  # warm compiles
+    due = np.cumsum(rng.exponential(1.0 / rate, len(prompts)))
+    t0, nxt, results = time.time(), 0, []
+    while nxt < len(prompts) or eng.num_queued or eng.num_active:
+        now = time.time() - t0
+        while nxt < len(prompts) and now >= due[nxt]:
+            eng.submit(prompts[nxt], MAX_NEW, seed=nxt)
+            nxt += 1
+        if not (eng.num_queued or eng.num_active):
+            time.sleep(min(0.01, max(0.0, due[nxt] - now)))
+            continue
+        results.extend(eng.step())
+    wall = time.time() - t0
+    lat = sorted(r.latency_s for r in results)
+    ttft = sorted(r.ttft_s for r in results)
+    toks = sum(len(r.generated) for r in results)
+    return dict(wall=wall, toks=toks, tput=toks / wall,
+                p50=lat[len(lat) // 2], p99=lat[-1],
+                ttft_p50=ttft[len(ttft) // 2])
+
+
+def run(arch: str = "olmo-1b") -> list[str]:
+    cfg = reduce_config(get_config(arch))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = make_workload(cfg)
+    out = [f"# E7 serving throughput ({cfg.name}, {N_REQUESTS} mixed-length "
+           f"requests x {MAX_NEW} new tokens)"]
+
+    seed_stats, seed_wall, cb_stats, cb_wall = bench_closed_batch(
+        cfg, params, prompts)
+    out.append("engine,decode_tok_s,end_to_end_tok_s,wall_s")
+    n_tok = N_REQUESTS * MAX_NEW
+    out.append(f"seed_loop,{seed_stats.tokens_per_s:.1f},"
+               f"{n_tok / seed_wall:.1f},{seed_wall:.2f}")
+    out.append(f"continuous_scan,{cb_stats.tokens_per_s:.1f},"
+               f"{n_tok / cb_wall:.1f},{cb_wall:.2f}")
+    speedup = seed_wall / cb_wall
+    out.append(f"derived: scan-based continuous batching is {speedup:.2f}x the "
+               f"seed loop end-to-end (per-step Python dispatch + grow_cache "
+               f"padding eliminated)")
+
+    s = bench_streaming(cfg, params, prompts)
+    out.append("streaming (Poisson 4 req/s, 4 slots): "
+               f"{s['tput']:.1f} tok/s p50={s['p50']:.2f}s p99={s['p99']:.2f}s "
+               f"ttft_p50={s['ttft_p50']:.2f}s")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args()
+    print("\n".join(run(args.arch)))
+
+
+if __name__ == "__main__":
+    main()

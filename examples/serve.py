@@ -1,5 +1,6 @@
-"""End-to-end serving driver: batched requests through prefill + decode with
-a growable KV cache (the same serve_step the dry-run lowers at pod scale).
+"""End-to-end serving example: requests stream through the continuous-batching
+engine — each is prefilled into a free KV-cache slot, decodes inside the
+scanned multi-token loop, and frees its slot for the next arrival.
 
     PYTHONPATH=src python examples/serve.py --arch gemma3-4b --max-new 24
 """
@@ -25,19 +26,25 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params)
+    # 2 slots for 4 requests: watch the engine recycle slots mid-flight
+    eng = Engine(cfg, params, max_len=256, max_slots=args.slots)
 
-    prompts = [bytes_tokenizer_encode(r, cfg.vocab_size) for r in REQUESTS]
-    out, stats = eng.generate(prompts, max_new=args.max_new,
-                              temperature=args.temperature)
-    print(f"arch={cfg.name} batch={len(prompts)} prefill={stats.prefill_s:.2f}s "
-          f"decode={stats.decode_s:.2f}s ({stats.tokens_per_s:.1f} tok/s)")
-    for req, seq in zip(REQUESTS, out):
-        gen = bytes_tokenizer_decode(seq[len(bytes_tokenizer_encode(req, cfg.vocab_size)):])
+    for i, req in enumerate(REQUESTS):
+        eng.submit(bytes_tokenizer_encode(req, cfg.vocab_size),
+                   max_new=args.max_new, temperature=args.temperature, seed=i)
+    results = {r.rid: r for r in eng.run()}
+
+    stats = eng.stats
+    print(f"arch={cfg.name} requests={len(REQUESTS)} slots={args.slots} "
+          f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
+          f"({stats.tokens_per_s:.1f} tok/s)")
+    for rid, req in enumerate(REQUESTS):
+        gen = bytes_tokenizer_decode(results[rid].generated)
         print(f"  [{req[:40]:40s}] -> {gen!r}")
 
 

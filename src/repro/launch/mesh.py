@@ -13,16 +13,22 @@ which is exactly what the paper's switchless-torus schedules
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # older jax releases have no AxisType / axis_types kwarg
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
     return jax.make_mesh(tuple(shape), tuple(axes),
                          axis_types=(AxisType.Auto,) * len(axes))
 

@@ -1,11 +1,16 @@
-"""Production serving driver: batched request loop over the Engine.
+"""Production serving driver: continuous-batching request loop.
+
+Streams a Poisson arrival process through the engine — requests are admitted
+into KV-cache slots as they free up, so the decode batch stays full without
+ever recompiling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
-        --requests 8 --max-new 32
+        --requests 16 --max-new 32 --rate 4
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -19,24 +24,52 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at once")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=512)
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch)) if args.reduced \
         else get_config(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params)
+    eng = Engine(cfg, params, max_len=args.max_len, max_slots=args.slots)
 
     rng = np.random.RandomState(0)
     prompts = [bytes_tokenizer_encode(f"request {i}: " + "x" * rng.randint(4, 40),
                                       cfg.vocab_size)
                for i in range(args.requests)]
-    out, stats = eng.generate(prompts, max_new=args.max_new,
-                              temperature=args.temperature)
-    print(f"arch={cfg.name} batch={len(prompts)} prefill={stats.prefill_s:.2f}s "
-          f"decode={stats.decode_s:.2f}s throughput={stats.tokens_per_s:.1f} tok/s")
+
+    results = []
+    if args.rate > 0:  # streaming arrivals
+        due = np.cumsum(rng.exponential(1.0 / args.rate, len(prompts)))
+        t0, nxt = time.time(), 0
+        while nxt < len(prompts) or eng.num_queued or eng.num_active:
+            now = time.time() - t0
+            while nxt < len(prompts) and now >= due[nxt]:
+                eng.submit(prompts[nxt], args.max_new, args.temperature,
+                           seed=nxt)
+                nxt += 1
+            if not (eng.num_queued or eng.num_active):
+                time.sleep(min(0.01, max(0.0, due[nxt] - now)))  # idle: wait
+                continue
+            results.extend(eng.step())
+    else:
+        for i, p in enumerate(prompts):
+            eng.submit(p, args.max_new, args.temperature, seed=i)
+        results = eng.run()
+
+    stats = eng.stats
+    lat = sorted(r.latency_s for r in results)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    print(f"arch={cfg.name} requests={len(results)} slots={args.slots} "
+          f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
+          f"throughput={stats.tokens_per_s:.1f} tok/s "
+          f"p50={p50:.2f}s p99={p99:.2f}s")
 
 
 if __name__ == "__main__":

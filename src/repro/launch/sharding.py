@@ -187,7 +187,7 @@ def constrain(x, axes: tuple):
     # inside a shard_map manual region the ambient abstract mesh marks some
     # axes Manual; constraints there must target that mesh with the manual
     # axes dropped from the spec (they are already local)
-    am = jax.sharding.get_abstract_mesh()
+    am = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
     manual = set()
     if am is not None and am.axis_names:
         manual = {n for n, t in zip(am.axis_names, am.axis_types)

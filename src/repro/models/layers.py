@@ -70,13 +70,14 @@ def rms_only(x, scale, eps=1e-6):
 # ---------------------------------------------------------------------------
 
 def rope(x, positions, theta: float):
-    """x: [..., S, n, d] (d even), positions: [S] int32."""
+    """x: [B, S, n, d] (d even), positions: [S] (shared) or [B, S] (per-row,
+    continuous-batching decode where every slot sits at its own offset)."""
     d = x.shape[-1]
     half = d // 2
     freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
-    ang = positions.astype(F32)[:, None] * freq[None, :]  # [S, half]
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = positions.astype(F32)[..., :, None] * freq  # [S, half] | [B, S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcasts over B and heads
+    sin = jnp.sin(ang)[..., :, None, :]
     x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
     return out.astype(x.dtype)
@@ -220,28 +221,31 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
 
 
 def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
-    """One-token decode.  x: [B,1,D]; pos: scalar int32 (tokens decoded so far).
+    """One-token decode.  x: [B,1,D]; pos: scalar int32 or [B] int32 (tokens
+    decoded so far, per batch slot — continuous batching runs every slot at
+    its own offset).
 
     Local layers use a ring-buffer cache of size `window` (write at
     ``pos % window``); global layers write at ``pos``.
     """
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
     q, k_new, v_new = _qkv(cfg, p, x, x)
     theta = cfg.rope_theta if not local else 10_000.0
-    pos_arr = pos[None] if pos.ndim == 0 else pos
-    q = rope(q, pos_arr, theta)
-    k_new = rope(k_new, pos_arr, theta)
+    q = rope(q, pos[:, None], theta)
+    k_new = rope(k_new, pos[:, None], theta)
     S = cache["k"].shape[1]
-    widx = (pos % S) if (local and cfg.window_size) else pos
-    k = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                 (0, widx, 0, 0))
-    v = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                 (0, widx, 0, 0))
+    widx = (pos % S) if (local and cfg.window_size) else jnp.minimum(pos, S - 1)
+    bidx = jnp.arange(B)
+    k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype))
     # validity mask: slot j valid iff it has been written (j <= pos when not
     # yet wrapped; all valid once wrapped).  RoPE is pre-applied to cached
     # keys, so scores need no position reconstruction.
     j = jnp.arange(S)
-    valid = jnp.where(pos >= S, True, j <= pos)[None, None, None, None, :]
-    B, _, H, dq = q.shape
+    valid = jnp.where(pos[:, None] >= S, True, j[None, :] <= pos[:, None])
+    valid = valid[:, None, None, None, :]  # [B,1,1,1,S]
+    _, _, H, dq = q.shape
     K = k.shape[2]
     qg = q.reshape(B, 1, K, H // K, dq)
     s = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=F32)
@@ -331,15 +335,16 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
     insight applied to the KV cache.)"""
     dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    pos_arr = pos[None] if pos.ndim == 0 else pos
-    q_nope, q_rope = _mla_q(cfg, p, x, pos_arr)  # [B,1,H,dn],[B,1,H,dr]
-    latent_new, k_rope_new = _mla_latent(cfg, p, x, pos_arr)
-    latent = lax.dynamic_update_slice(cache["latent"],
-                                      latent_new.astype(cache["latent"].dtype),
-                                      (0, pos, 0))
-    k_rope = lax.dynamic_update_slice(cache["k_rope"],
-                                      k_rope_new.astype(cache["k_rope"].dtype),
-                                      (0, pos, 0))
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
+    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])  # [B,1,H,dn],[B,1,H,dr]
+    latent_new, k_rope_new = _mla_latent(cfg, p, x, pos[:, None])
+    bidx = jnp.arange(B)
+    widx = jnp.minimum(pos, cache["latent"].shape[1] - 1)
+    latent = cache["latent"].at[bidx, widx].set(
+        latent_new[:, 0].astype(cache["latent"].dtype))
+    k_rope = cache["k_rope"].at[bidx, widx].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
     wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
     wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
@@ -348,7 +353,7 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
     s = s + jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=F32)
     s = s * ((dn + cfg.qk_rope_dim) ** -0.5)
     S = latent.shape[1]
-    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    valid = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
     s = jnp.where(valid, s, NEG_INF)
     s = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", s.astype(latent.dtype), latent)
@@ -565,6 +570,8 @@ def moe_forward(cfg: ArchConfig, p: dict, x):
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     if cfg.moe_shard_map and mesh is not None and tp > 1 and E % tp == 0:
         from jax.sharding import PartitionSpec as P
+
+        from repro.core.torus import shard_map as _shmap
         # ZeRO-3 boundary: explicitly all-gather the FSDP (data-axis) shards
         # of the expert weights *before* the manual region — a data-sharded
         # contraction inside shard_map would otherwise force a cross-data
@@ -572,13 +579,17 @@ def moe_forward(cfg: ArchConfig, p: dict, x):
         # the bf16 copy-combiner all-reduce it generates).
         wg_, wu_, wd_ = (constrain(p[k], ("experts", None, None))
                          for k in ("w_gate", "w_up", "w_down"))
-        fn = jax.shard_map(
-            functools.partial(_moe_expert_block, E_l=E // tp, C=C, kk=kk,
-                              dt=dt, axis="model"),
-            mesh=mesh, axis_names={"model"},
+        body = functools.partial(_moe_expert_block, E_l=E // tp, C=C, kk=kk,
+                                 dt=dt, axis="model")
+        specs = dict(
             in_specs=(P(), P(), P(None, "model", None), P(), P(), P("model"),
                       P("model"), P("model")),
             out_specs=P())
+        if hasattr(jax, "shard_map"):  # newer jax: partial-manual via names
+            fn = jax.shard_map(body, mesh=mesh, axis_names={"model"}, **specs)
+        else:  # jax.experimental: other mesh axes stay auto
+            auto = frozenset(mesh.axis_names) - {"model"}
+            fn = _shmap(body, mesh=mesh, auto=auto, check_rep=False, **specs)
         out = fn(xt, wk3, idx3, sel3, pos3, wg_, wu_, wd_)
     else:
         out = _moe_expert_block(xt, wk3, idx3, sel3, pos3, p["w_gate"],

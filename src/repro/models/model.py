@@ -97,6 +97,9 @@ def _layer_cache_specs(cfg: ArchConfig, spec: LayerSpec, batch: int, seq: int):
 
 def cache_specs(cfg: ArchConfig, batch: int, seq: int,
                 main_repeats: int | None = None) -> list:
+    """Decode-cache spec tree.  ``batch`` is the number of serving *slots*:
+    the continuous-batching engine allocates this once at ``[slots, max_len]``
+    and recycles rows, so ``seq`` is a fixed capacity, not a growing length."""
     out = []
     for stage in cfg.stages(main_repeats):
         group = {str(i): _layer_cache_specs(cfg, sp, batch, seq)
@@ -332,7 +335,9 @@ def prefill(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
 
 def decode_step(cfg: ArchConfig, params, caches, token, pos, *,
                 main_repeats: int | None = None):
-    """One-token decode.  token: [B,1] int32; pos: scalar int32."""
+    """One-token decode.  token: [B,1] int32; pos: scalar int32 (all slots in
+    lock-step) or [B] int32 (slot-indexed — every sequence at its own offset,
+    as driven by the continuous-batching engine)."""
     batch = {"tokens": token}
     hidden, _, new_caches = forward_hidden(cfg, params, batch, mode="decode",
                                            caches=caches, pos=pos,

@@ -1,1 +1,3 @@
-from repro.serving.engine import Engine, grow_cache  # noqa: F401
+from repro.serving.engine import (Engine, Request, RequestResult,  # noqa: F401
+                                  ServeStats, bytes_tokenizer_decode,
+                                  bytes_tokenizer_encode, grow_cache)

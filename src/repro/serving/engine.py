@@ -1,13 +1,30 @@
-"""Batched serving engine: continuous prefill -> decode with a growable KV
-cache, greedy/temperature sampling, and a byte-level tokenizer stub.
+"""Continuous-batching serving engine.
 
-This is the inference-side end-to-end driver (deliverable (b)): requests are
-batched, prefilled once, then decoded step-by-step; the same ``decode_step``
-the dry-run lowers for the decode_32k / long_500k cells.
+Requests enter a bounded queue (admission control), get prefilled one at a
+time into a free *slot* of a fixed-size batched KV cache, and decode together
+in a ``lax.scan`` over ``decode_chunk`` steps — the hot path is one compiled
+function, no per-token Python dispatch.  Finished sequences are evicted and
+the freed slot is re-prefilled from the queue without recompiling anything
+(prefill compiles once per prompt-length bucket; the decode chunk compiles
+once, period).
+
+Cache layout: every slot owns row ``i`` of a ``[slots, max_len]`` KV cache
+allocated up front via ``model.cache_specs`` — global-attention layers use a
+linear region written at ``pos``, sliding-window layers a ring written at
+``pos % window``, SSM layers a constant-size state.  This replaces the seed
+engine's ``grow_cache`` (a full-tree ``jnp.pad`` per generate call).
+
+Per-slot determinism: each request carries its own PRNG key and temperature,
+and every slot decodes at its own position, so a request's output is
+independent of whatever shares the batch with it.  (Exception: MoE layers —
+expert capacity is routed jointly over the batch, so under capacity pressure
+a request's routing can depend on concurrent traffic, as on any batched MoE
+serving system.)
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -15,10 +32,11 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
-from repro.models.params import ParamSpec, is_spec
+from repro.models.params import is_spec
 
 
 def bytes_tokenizer_encode(text: str, vocab: int) -> list[int]:
@@ -29,9 +47,14 @@ def bytes_tokenizer_decode(tokens) -> str:
     return bytes(int(t) % 256 for t in tokens).decode("utf-8", errors="replace")
 
 
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
 def grow_cache(cfg: ArchConfig, caches, new_len: int):
-    """Pad every kv_seq cache dim (global-attention / MLA layers) to
-    ``new_len``.  Ring-buffer (local) and SSM caches keep their size."""
+    """Legacy cache growth: pad every kv_seq dim to ``new_len``.  The engine
+    no longer uses this (slots are fixed-size); kept as the reference path for
+    tests and the serving benchmark's seed-style baseline."""
     specs = M.cache_specs(cfg, 1, new_len)
 
     def grow(spec, leaf):
@@ -49,58 +72,316 @@ def grow_cache(cfg: ArchConfig, caches, new_len: int):
     return jax.tree.map(grow, specs, caches, is_leaf=lambda x: is_spec(x))
 
 
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    seed: int = 0
+    arrival_s: float = 0.0
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt: list[int]
+    generated: list[int]
+    arrival_s: float
+    first_token_s: float
+    finish_s: float
+
+    @property
+    def tokens(self) -> list[int]:
+        return list(self.prompt) + list(self.generated)
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    prefills: int = 0
+    chunks: int = 0
 
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
 
 
-class Engine:
-    """Greedy/temperature batched generation over a fixed params pytree."""
+@dataclass
+class _Slot:
+    req: Request
+    emitted: list[int] = field(default_factory=list)
+    first_token_s: float = 0.0
 
-    def __init__(self, cfg: ArchConfig, params, max_len: int = 512):
-        self.cfg, self.params, self.max_len = cfg, params, max_len
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
-        self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching engine over a fixed params pytree.
+
+    Parameters
+    ----------
+    max_slots:      concurrent sequences (the decode batch dimension)
+    max_len:        per-slot KV capacity; admission requires
+                    ``bucketed_prompt + max_new <= max_len``
+    prefill_bucket: prompts are left-padded to a multiple of this, bounding
+                    the number of prefill compilations
+    decode_chunk:   scan steps per compiled decode call (the scheduler syncs
+                    with the host — evict/admit — once per chunk)
+    eos_id:         optional stop token (checked inside the scan)
+    max_queue:      admission-control bound; ``submit`` refuses beyond it
+    """
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 512, *,
+                 max_slots: int = 8, prefill_bucket: int = 32,
+                 decode_chunk: int = 8, eos_id: int | None = None,
+                 max_queue: int = 1024):
+        self.cfg, self.params = cfg, params
+        self.max_slots, self.max_len = max_slots, max_len
+        self.prefill_bucket = prefill_bucket
+        self.decode_chunk = decode_chunk
+        self.eos_id = eos_id
+        self.max_queue = max_queue
+        self.stats = ServeStats()
+
+        self._cache_specs = M.cache_specs(cfg, max_slots, max_len)
+        self._caches = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
+            self._cache_specs, is_leaf=is_spec)
+        B = max_slots
+        self._cur = np.zeros(B, np.int32)        # next input token per slot
+        self._pos = np.zeros(B, np.int32)        # its position
+        self._remaining = np.zeros(B, np.int32)  # tokens still to emit
+        self._temp = np.zeros(B, np.float32)
+        self._keys = np.zeros((B, 2), np.uint32)
+
+        self._queue: deque[Request] = deque()
+        self._slots: list[_Slot | None] = [None] * B
+        self._finished: list[RequestResult] = []
+        self._next_rid = 0
+
+        self._decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
+        self._prefill_fns: dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    # compiled pieces
+    # ------------------------------------------------------------------
+
+    def _sample(self, logits, temp, keys):
+        """Per-slot sampling.  logits: [B,Vp]; temp: [B]; keys: [B,2] u32."""
+        lf = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        greedy = jnp.argmax(lf, -1).astype(jnp.int32)
+
+        def one(key, lg, t):
+            return jax.random.categorical(key, lg / jnp.maximum(t, 1e-6))
+
+        sampled = jax.vmap(one)(keys, lf, temp).astype(jnp.int32)
+        nxt = jnp.where(temp > 0.0, sampled, greedy)
+        keys = jax.vmap(lambda k: jax.random.split(k, 2)[1])(keys)
+        return nxt, keys
+
+    def _decode_chunk(self, params, caches, cur, pos, remaining, temp, keys):
+        """``decode_chunk`` fused decode steps; emits [B, steps] tokens."""
+        cfg = self.cfg
+
+        def body(carry, _):
+            caches, cur, pos, remaining, keys = carry
+            active = remaining > 0
+            logits, caches = M.decode_step(cfg, params, caches, cur[:, None],
+                                           pos)
+            nxt, keys = self._sample(logits[:, -1], temp, keys)
+            nxt = jnp.where(active, nxt, cur)  # freeze finished slots
+            step = active.astype(jnp.int32)
+            remaining = remaining - step
+            if self.eos_id is not None:
+                remaining = jnp.where(active & (nxt == self.eos_id), 0,
+                                      remaining)
+            return (caches, nxt, pos + step, remaining, keys), nxt
+
+        (caches, cur, pos, remaining, keys), toks = lax.scan(
+            body, (caches, cur, pos, remaining, keys), None,
+            length=self.decode_chunk)
+        return caches, cur, pos, remaining, keys, toks.T  # [B, steps]
+
+    def _write_slot(self, caches, small, slot):
+        """Copy a 1-sequence prefill cache into slot `slot` of the big cache,
+        zeroing the slot's tail (slot recycling = this overwrite)."""
+
+        def wr(spec, big, sm):
+            b_ax = spec.axes.index("batch")
+            sm = sm[tuple(slice(0, min(a, b))
+                          for a, b in zip(sm.shape, big.shape))]
+            block_shape = tuple(1 if i == b_ax else d
+                                for i, d in enumerate(big.shape))
+            block = jnp.zeros(block_shape, big.dtype)
+            block = lax.dynamic_update_slice(block, sm.astype(big.dtype),
+                                             (0,) * big.ndim)
+            start = tuple(slot if i == b_ax else 0 for i in range(big.ndim))
+            return lax.dynamic_update_slice(big, block, start)
+
+        return jax.tree.map(wr, self._cache_specs, caches, small,
+                            is_leaf=is_spec)
+
+    def _prefill_fn(self, plen: int):
+        """Jitted prefill+insert, one compilation per prompt-length bucket."""
+        if plen not in self._prefill_fns:
+            cfg = self.cfg
+
+            def fn(params, caches, tokens, slot, temp1, key):
+                logits, small = M.prefill(cfg, params, {"tokens": tokens})
+                caches = self._write_slot(caches, small, slot)
+                t0, keys1 = self._sample(logits[:, -1], temp1[None],
+                                         key[None])
+                return caches, t0[0], keys1[0]
+
+            self._prefill_fns[plen] = jax.jit(fn, donate_argnums=(1,))
+        return self._prefill_fns[plen]
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def padded_len(self, prompt_len: int) -> int:
+        return max(self.prefill_bucket,
+                   _round_up(prompt_len, self.prefill_bucket))
+
+    def submit(self, prompt: list[int], max_new: int = 32,
+               temperature: float = 0.0, seed: int = 0) -> int:
+        """Admit a request; returns its rid.  Raises ``ValueError`` when the
+        request can never fit a slot and ``RuntimeError`` on queue overflow
+        (backpressure — callers should retry later)."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if self.padded_len(len(prompt)) + max_new > self.max_len:
+            raise ValueError(
+                f"request needs {self.padded_len(len(prompt)) + max_new} "
+                f"cache rows > max_len={self.max_len}")
+        if len(self._queue) >= self.max_queue:
+            raise RuntimeError("admission queue full")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, list(prompt), max_new,
+                                   float(temperature), seed,
+                                   arrival_s=time.time()))
+        return rid
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for i in range(self.max_slots):
+            if not self._queue or self._slots[i] is not None:
+                continue
+            req = self._queue.popleft()
+            plen = self.padded_len(len(req.prompt))
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, plen - len(req.prompt):] = req.prompt  # left-pad
+            key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))
+            t0 = time.time()
+            self._caches, first, key1 = self._prefill_fn(plen)(
+                self.params, self._caches, jnp.asarray(toks), jnp.int32(i),
+                jnp.float32(req.temperature), key)
+            first = int(first)
+            self.stats.prefill_s += time.time() - t0
+            self.stats.prefills += 1
+            now = time.time()
+            self._slots[i] = _Slot(req, emitted=[first], first_token_s=now)
+            self._cur[i], self._pos[i] = first, plen
+            self._remaining[i] = req.max_new - 1
+            self._temp[i] = req.temperature
+            self._keys[i] = np.asarray(key1)
+            self.stats.tokens_out += 1
+            if self._remaining[i] == 0 or first == self.eos_id:
+                self._remaining[i] = 0
+                self._retire(i, now)
+
+    def _retire(self, i: int, now: float):
+        s = self._slots[i]
+        self._finished.append(RequestResult(
+            s.req.rid, s.req.prompt, s.emitted, s.req.arrival_s,
+            s.first_token_s, now))
+        self._slots[i] = None
+
+    def step(self) -> list[RequestResult]:
+        """One scheduling iteration: admit into free slots, run one compiled
+        decode chunk, evict finished sequences.  Returns newly finished."""
+        self._admit()
+        if self.num_active:
+            before = self._remaining.copy()
+            t0 = time.time()
+            (self._caches, cur, pos, remaining, keys, toks) = self._decode_fn(
+                self.params, self._caches, jnp.asarray(self._cur),
+                jnp.asarray(self._pos), jnp.asarray(self._remaining),
+                jnp.asarray(self._temp), jnp.asarray(self._keys))
+            toks = np.asarray(toks)
+            self._cur, self._pos = np.array(cur), np.array(pos)
+            self._remaining, self._keys = np.array(remaining), np.array(keys)
+            self.stats.decode_s += time.time() - t0
+            self.stats.chunks += 1
+            now = time.time()
+            for i, slot in enumerate(self._slots):
+                if slot is None:
+                    continue
+                take = toks[i][: before[i]]
+                if self.eos_id is not None:
+                    stop = np.nonzero(take == self.eos_id)[0]
+                    if stop.size:
+                        take = take[: stop[0] + 1]
+                slot.emitted.extend(int(t) for t in take)
+                self.stats.tokens_out += len(take)
+                if self._remaining[i] == 0:
+                    self._retire(i, now)
+        out, self._finished = self._finished, []
+        return out
+
+    def run(self) -> list[RequestResult]:
+        """Drive ``step`` until queue and slots drain; returns all results."""
+        results = []
+        while self._queue or self.num_active:
+            results.extend(self.step())
+        return results
+
+    # ------------------------------------------------------------------
+    # batch-generate compatibility surface (seed API)
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: list[list[int]], max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0):
-        cfg = self.cfg
-        B = len(prompts)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((B, plen), np.int32)
-        for i, p in enumerate(prompts):  # left-pad with token 0
-            toks[i, plen - len(p):] = p
-        stats = ServeStats()
-
-        t0 = time.time()
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        caches = grow_cache(cfg, caches, plen + max_new)
-        stats.prefill_s = time.time() - t0
-
-        rng = jax.random.PRNGKey(seed)
-        out = [list(p) for p in prompts]
-        cur = self._sample(logits[:, -1], temperature, rng)
-        t0 = time.time()
-        for step in range(max_new):
-            for i in range(B):
-                out[i].append(int(cur[i]))
-            logits, caches = self._decode(self.params, caches, cur[:, None],
-                                          jnp.int32(plen + step))
-            rng, sub = jax.random.split(rng)
-            cur = self._sample(logits[:, -1], temperature, sub)
-        stats.decode_s = time.time() - t0
-        stats.tokens_out = B * max_new
-        return out, stats
-
-    def _sample(self, logits, temperature, rng):
-        logits = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
-        if temperature <= 0.0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+        """Submit a closed batch and run it to completion.  Returns
+        ``(sequences, stats)`` like the seed engine: ``sequences[i]`` is
+        prompt + generated for ``prompts[i]``."""
+        t_stats = ServeStats(prefill_s=-self.stats.prefill_s,
+                             decode_s=-self.stats.decode_s,
+                             tokens_out=-self.stats.tokens_out)
+        rids = [self.submit(p, max_new, temperature, seed=seed * 1000003 + i)
+                for i, p in enumerate(prompts)]
+        by_rid = {r.rid: r for r in self.run()}
+        out = [by_rid[r].tokens for r in rids]
+        t_stats.prefill_s += self.stats.prefill_s
+        t_stats.decode_s += self.stats.decode_s
+        t_stats.tokens_out += self.stats.tokens_out
+        return out, t_stats

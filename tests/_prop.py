@@ -1,0 +1,69 @@
+"""Property-test shim: re-export hypothesis when installed, otherwise a
+minimal deterministic fallback so tier-1 collects and runs without network.
+
+The fallback drives each ``@given`` test over a fixed pseudo-random sample of
+the declared strategy space (seeded, so runs are reproducible).  It covers
+only the strategy surface the suite uses: ``integers``, ``booleans``,
+``sampled_from``.
+"""
+from __future__ import annotations
+
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(items):
+            seq = list(items)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def settings(*_a, **kw):
+        max_examples = kw.get("max_examples")
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # NB: no functools.wraps — pytest must not see the inner
+            # signature, or it would resolve the drawn params as fixtures
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", None) \
+                    or _FALLBACK_EXAMPLES
+                rng = random.Random(0xC68A)
+                for _ in range(min(n, _FALLBACK_EXAMPLES)):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core.cgra import (CGRAConfig, MXU_DIM, block_shape,
                              select_block_shapes, simulate_gemm,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
 from repro.core.quant import dequantize, quantize

@@ -12,6 +12,7 @@ from repro.serving.engine import Engine, bytes_tokenizer_encode
 from repro.training import AdamWConfig, init_state, make_train_step
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     """~60 steps on the synthetic induction stream must visibly learn."""
     cfg = reduce_config(get_config("olmo-1b")).with_(num_layers=2)

@@ -16,12 +16,15 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax import shard_map
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:  # newer jax moved it to the top level
+        from jax import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core import torus
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
     rng = np.random.RandomState(0)
     T, D, F = 64, 32, 48
     x = rng.randn(T, D).astype(np.float32)
@@ -72,6 +75,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_torus_collectives_subprocess():
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
