@@ -1,0 +1,89 @@
+"""End-to-end kernel_mode sweep on the edge-transformer config.
+
+Runs the full model (forward + prefill) on ``cgra-edge`` under every
+execution mode the kernel stack supports and reports wall time plus accuracy
+against the fp32 reference path:
+
+- ``reference``          — jnp einsum/matmul oracle
+- ``interpret``          — Pallas CGRA kernels through the interpreter (CPU;
+                           validates the exact kernel math, not a speed run)
+- ``pallas``             — compiled TPU kernels (skipped off-TPU)
+- ``w8a8 reference``     — int8 weights + dynamic int8 activations, jnp int32
+                           accumulation (the packed-data edge scenario)
+- ``w8a8 interpret/pallas`` — same, through ``block_gemm_int8``'s fused
+                           dequant epilogue
+
+    PYTHONPATH=src python benchmarks/kernel_mode_sweep.py [--seq 64] [--iters 3]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def _time(fn, iters: int) -> float:
+    jax.block_until_ready(fn())  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / iters * 1e3  # ms
+
+
+def run(seq: int = 64, iters: int = 3) -> list[str]:
+    cfg = get_config("cgra-edge")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    params_q = M.quantize_params(cfg, params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, seq), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    on_tpu = jax.default_backend() == "tpu"
+
+    def logits_fn(c, p):
+        def f():
+            hidden, _, _ = M.forward_hidden(c, p, batch, mode="train")
+            return M.lm_logits(c, p, hidden)
+        return f
+
+    ref = np.asarray(logits_fn(cfg, params)(), np.float32)
+    ref_argmax = np.argmax(ref[:, :, : cfg.vocab_size], -1)
+
+    out = [f"# kernel_mode sweep — {cfg.name}, B=1 S={seq}, "
+           f"backend={jax.default_backend()}"]
+    out.append("mode,forward_ms,prefill_ms,max_abs_dlogits,argmax_agree")
+    sweep = [("reference", cfg, params), ("interpret",
+             cfg.with_(kernel_mode="interpret"), params)]
+    if on_tpu:
+        sweep.append(("pallas", cfg.with_(kernel_mode="pallas"), params))
+    sweep.append(("w8a8 reference", cfg.with_(quant="w8a8"), params_q))
+    sweep.append(("w8a8 interpret",
+                  cfg.with_(quant="w8a8", kernel_mode="interpret"), params_q))
+    if on_tpu:
+        sweep.append(("w8a8 pallas",
+                      cfg.with_(quant="w8a8", kernel_mode="pallas"), params_q))
+
+    for name, c, p in sweep:
+        lg = np.asarray(logits_fn(c, p)(), np.float32)
+        dmax = float(np.max(np.abs(lg - ref)))
+        agree = float(np.mean(np.argmax(lg[:, :, : cfg.vocab_size], -1)
+                              == ref_argmax))
+        fwd_ms = _time(jax.jit(logits_fn(c, p)), iters)
+        pre_ms = _time(jax.jit(lambda c=c, p=p: M.prefill(c, p, batch)[0]),
+                       iters)
+        out.append(f"{name},{fwd_ms:.1f},{pre_ms:.1f},{dmax:.2e},{agree:.3f}")
+    if not on_tpu:
+        out.append("# pallas (compiled) modes skipped: no TPU backend; "
+                   "interpret mode executes the identical kernel math")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=3)
+    a = ap.parse_args()
+    print("\n".join(run(a.seq, a.iters)))

@@ -3,6 +3,7 @@
 E1 blocking sweep (C1/C4)   E2 interconnect (C3)   E3 MOB overlap (C2)
 E4 kernel microbench (C1)   E5 edge transformer    E6 roofline table
 E7 serving throughput (continuous batching vs seed loop)
+E8 kernel_mode sweep (reference vs Pallas vs w8a8, end to end)
 """
 import sys
 import time
@@ -10,11 +11,12 @@ import time
 
 def main() -> None:
     from benchmarks import (blocking_sweep, edge_transformer, interconnect,
-                            kernel_bench, mob_overlap, roofline_table,
-                            serving_throughput)
+                            kernel_bench, kernel_mode_sweep, mob_overlap,
+                            roofline_table, serving_throughput)
     suites = [("E1", blocking_sweep), ("E2", interconnect), ("E3", mob_overlap),
               ("E4", kernel_bench), ("E5", edge_transformer),
-              ("E6", roofline_table), ("E7", serving_throughput)]
+              ("E6", roofline_table), ("E7", serving_throughput),
+              ("E8", kernel_mode_sweep)]
     if len(sys.argv) > 1:
         suites = [(n, m) for n, m in suites if n in sys.argv[1:]]
     for name, mod in suites:

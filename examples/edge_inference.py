@@ -2,6 +2,11 @@
 through the CGRA block-GEMM path, validated against the fp32 reference and
 costed on the 4x4 PE / 4x2 MOB array.
 
+The whole model — q/k/v/o projections, MLP and LM head — runs through the
+quantized GEMM stack (``quant="w8a8"`` + ``model.quantize_params``), not
+just a single demo projection; ``kernel_mode="interpret"`` additionally
+executes the exact Pallas kernel math on CPU.
+
     PYTHONPATH=src python examples/edge_inference.py
 """
 import jax
@@ -10,8 +15,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cgra import CGRAConfig, simulate_transformer_layer
-from repro.core.gemm import cgra_gemm_w8a8
-from repro.core.quant import quantize
 from repro.models import model as M
 
 
@@ -21,20 +24,32 @@ def main():
     B, S = 1, 32
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
 
-    # fp32 reference hidden states
+    # fp32 reference logits
     hidden, _, _ = M.forward_hidden(cfg, params, {"tokens": tokens}, mode="train")
     logits_ref = M.lm_logits(cfg, params, hidden)
 
-    # w8a8 path for the LM head GEMM (the hot 256x30522 projection): packed
-    # int8 with per-channel scales through the CGRA kernel (interpret mode)
-    head_q = quantize(params["lm_head"], axis=-1)
-    logits_q = cgra_gemm_w8a8(hidden, head_q, mode="interpret")
+    # full w8a8 forward: weights int8-quantized once, every dense projection
+    # and the LM head served through the packed int8 GEMM with fused dequant
+    cfg_q = cfg.with_(quant="w8a8")
+    params_q = M.quantize_params(cfg_q, params)
+    hidden_q, _, _ = M.forward_hidden(cfg_q, params_q, {"tokens": tokens},
+                                      mode="train")
+    logits_q = M.lm_logits(cfg_q, params_q, hidden_q)
     rel = np.abs(np.asarray(logits_q) - np.asarray(logits_ref)) / (
         np.abs(np.asarray(logits_ref)) + 1.0)
     agree = float(np.mean(np.argmax(np.asarray(logits_q), -1)
                           == np.argmax(np.asarray(logits_ref), -1)))
-    print(f"w8a8 LM head: median rel err {np.median(rel):.4f}, "
+    print(f"w8a8 full model: median rel err {np.median(rel):.4f}, "
           f"argmax agreement {agree:.3f}")
+
+    # same quantized model through the Pallas kernels (interpret mode = the
+    # exact kernel math, executed on CPU)
+    cfg_qi = cfg_q.with_(kernel_mode="interpret")
+    hidden_qi, _, _ = M.forward_hidden(cfg_qi, params_q, {"tokens": tokens},
+                                       mode="train")
+    logits_qi = M.lm_logits(cfg_qi, params_q, hidden_qi)
+    dk = float(np.max(np.abs(np.asarray(logits_qi) - np.asarray(logits_q))))
+    print(f"w8a8 Pallas-interpret vs jnp-int8 reference: max |dlogits| {dk:.2e}")
 
     # energy/latency budget on the paper's array
     cgra = CGRAConfig()

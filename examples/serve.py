@@ -27,12 +27,17 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--kernel-mode", default=None,
+                    choices=["reference", "interpret", "pallas"])
+    ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
+                    help="w8a8: serve through the packed int8 GEMM kernels")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
     # 2 slots for 4 requests: watch the engine recycle slots mid-flight
-    eng = Engine(cfg, params, max_len=256, max_slots=args.slots)
+    eng = Engine(cfg, params, max_len=256, max_slots=args.slots,
+                 kernel_mode=args.kernel_mode, quant=args.quant)
 
     for i, req in enumerate(REQUESTS):
         eng.submit(bytes_tokenizer_encode(req, cfg.vocab_size),
@@ -40,7 +45,8 @@ def main():
     results = {r.rid: r for r in eng.run()}
 
     stats = eng.stats
-    print(f"arch={cfg.name} requests={len(REQUESTS)} slots={args.slots} "
+    print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
+          f"quant={eng.cfg.quant} requests={len(REQUESTS)} slots={args.slots} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s)")
     for rid, req in enumerate(REQUESTS):

@@ -143,6 +143,10 @@ class ArchConfig:
 
     # execution knobs (overridable by launcher / perf loop)
     kernel_mode: str = "reference"  # reference | pallas | interpret
+    # w8a8: weights int8-quantized once at load (models.model.quantize_params),
+    # activations quantized per-row on the fly, GEMMs through the packed int8
+    # kernel with fused dequant — the paper's packed-data edge-inference mode
+    quant: str = "none"  # none | w8a8
     remat_policy: str = "full"  # none | dots | full
     pad_heads_to: int = 1  # pad q heads to a multiple of this (TP divisibility)
     pad_vocab_to: int = 256

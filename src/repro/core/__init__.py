@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+
+def round_up(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n`` (block-grid alignment)."""
+    return ((n + m - 1) // m) * m

@@ -4,7 +4,10 @@ Block-wise attention is the paper's C1/C4 applied to the attention GEMM pair:
 the (bq x bk) score tile never leaves VMEM, the running max/denominator are
 the output-stationary accumulator state, and the KV block streaming is the
 MOB prefetch pipeline.  Supports causal masking, sliding windows (Gemma-3
-local layers) and GQA via index-map head folding (no KV broadcast in HBM).
+local layers), logit softcapping (Gemma-3 global layers) and GQA via
+index-map head folding (no KV broadcast in HBM).  Ragged sequence lengths
+are padded up to the block grid (padded keys masked, padded query rows
+sliced off) the same way ``block_gemm`` pads ragged GEMMs.
 """
 from __future__ import annotations
 
@@ -15,13 +18,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import round_up
+
 F32 = jnp.float32
 NEG = -1e30
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                nk: int, bq: int, bk: int, sq: int, sk: int, scale: float,
-               causal: bool, window: int):
+               causal: bool, window: int, softcap: float):
+    """One (batch*head, q-block, k-block) grid step.
+
+    ``sq``/``sk`` are the *unpadded* sequence lengths: the query-position
+    offset aligns the last real query with the last real key, and key columns
+    at ``kpos >= sk`` are grid padding that must never receive weight.
+    """
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -35,11 +46,13 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=F32) * scale  # [bq, bk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
 
     iq = pl.program_id(1)
     qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
+    mask = kpos < sk  # grid padding: ragged Sk rounded up to bk
     if causal:
         mask &= kpos <= qpos
     if window:
@@ -49,6 +62,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
     p = jnp.exp(s - m_new)
+    # rows with every key masked so far keep m_new == NEG, where the update
+    # above degenerates to exp(0) == 1 per masked entry (mean(V) instead of
+    # zeros); zero their probabilities so l stays 0 and the store emits 0.
+    p = jnp.where(m_new > NEG * 0.5, p, 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
@@ -61,41 +78,49 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
-                    scale=None, interpret=False):
+                    scale=None, softcap=0.0, interpret=False):
     """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] with H % K == 0 (GQA folded in the
-    BlockSpec index map).  Sq % bq == 0 and Sk % bk == 0 required."""
+    BlockSpec index map).  Arbitrary Sq/Sk: ragged shapes are padded up to
+    the block grid and sliced back (padded keys are masked out in-kernel).
+    Fully-masked rows return zeros."""
     B, H, Sq, d = q.shape
     K = k.shape[1]
     Sk = k.shape[2]
     G = H // K
-    assert Sq % min(bq, Sq) == 0 and Sk % min(bk, Sk) == 0
-    bq, bk_ = min(bq, Sq), min(bk, Sk)
+    bq_, bk_ = min(bq, Sq), min(bk, Sk)
+    Sqp, Skp = round_up(Sq, bq_), round_up(Sk, bk_)
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
     scale = scale if scale is not None else d ** -0.5
-    qf = q.reshape(B * H, Sq, d)
-    kf = k.reshape(B * K, Sk, d)
-    vf = v.reshape(B * K, Sk, d)
-    nk = Sk // bk_
-    grid = (B * H, Sq // bq, nk)
+    qf = q.reshape(B * H, Sqp, d)
+    kf = k.reshape(B * K, Skp, d)
+    vf = v.reshape(B * K, Skp, d)
+    nk = Skp // bk_
+    grid = (B * H, Sqp // bq_, nk)
 
     def kv_map(bh, iq, ik):
         return ((bh // H) * K + (bh % H) // G, ik, 0)
 
     out = pl.pallas_call(
-        functools.partial(_fa_kernel, nk=nk, bq=bq, bk=bk_, sq=Sq, sk=Sk,
-                          scale=scale, causal=causal, window=window),
+        functools.partial(_fa_kernel, nk=nk, bq=bq_, bk=bk_, sq=Sq, sk=Sk,
+                          scale=scale, causal=causal, window=window,
+                          softcap=softcap),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
             pl.BlockSpec((1, bk_, d), kv_map),
             pl.BlockSpec((1, bk_, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        out_specs=pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), F32),
-            pltpu.VMEM((bq, 1), F32),
-            pltpu.VMEM((bq, d), F32),
+            pltpu.VMEM((bq_, 1), F32),
+            pltpu.VMEM((bq_, 1), F32),
+            pltpu.VMEM((bq_, d), F32),
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(B, H, Sq, d)
+    return out.reshape(B, H, Sqp, d)[:, :, :Sq]

@@ -44,13 +44,15 @@ def cgra_matmul_int8(a_q, b_q, a_scale, b_scale, mode: str = "reference",
                            interpret=(mode == "interpret"), out_dtype=out_dtype)
 
 
-def attention(q, k, v, *, causal=True, window=0, mode: str = "reference",
-              bq=128, bk=128):
-    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0)."""
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              mode: str = "reference", bq=128, bk=128):
+    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok."""
     if mode == "reference":
         G = q.shape[1] // k.shape[1]
         kb = jnp.repeat(k, G, axis=1)
         vb = jnp.repeat(v, G, axis=1)
-        return ref.flash_attention_ref(q, kb, vb, causal=causal, window=window)
-    return flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+        return ref.flash_attention_ref(q, kb, vb, causal=causal, window=window,
+                                       softcap=softcap)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, bq=bq, bk=bk,
                            interpret=(mode == "interpret"))

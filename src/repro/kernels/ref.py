@@ -22,12 +22,16 @@ def block_gemm_int8_ref(a_q, b_q, a_scale, b_scale, out_dtype=F32):
     return (acc.astype(F32) * a_scale * b_scale).astype(out_dtype)
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
-    """q: [B,H,Sq,d], k/v: [B,H,Sk,d] (kv heads already broadcast)."""
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                        softcap=0.0):
+    """q: [B,H,Sq,d], k/v: [B,H,Sk,d] (kv heads already broadcast).
+    Fully-masked rows return zeros (matching the Pallas kernel)."""
     B, H, Sq, d = q.shape
     Sk = k.shape[2]
     scale = scale if scale is not None else d ** -0.5
     s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=F32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
     qpos = jnp.arange(Sq)[:, None]
     kpos = jnp.arange(Sk)[None, :]
     mask = jnp.ones((Sq, Sk), bool)
@@ -37,4 +41,5 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
         mask &= kpos > qpos + (Sk - Sq) - window
     s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)  # all-masked row -> zeros, not 1/Sk
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -31,12 +31,20 @@ def main():
                     help="Poisson arrival rate (req/s); 0 = all at once")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--kernel-mode", default=None,
+                    choices=["reference", "interpret", "pallas"],
+                    help="route GEMMs/attention through the CGRA Pallas "
+                         "kernels (default: config's kernel_mode)")
+    ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
+                    help="w8a8: int8-quantize weights at load and serve "
+                         "through the packed int8 GEMM kernels")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch)) if args.reduced \
         else get_config(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_len=args.max_len, max_slots=args.slots)
+    eng = Engine(cfg, params, max_len=args.max_len, max_slots=args.slots,
+                 kernel_mode=args.kernel_mode, quant=args.quant)
 
     rng = np.random.RandomState(0)
     prompts = [bytes_tokenizer_encode(f"request {i}: " + "x" * rng.randint(4, 40),
@@ -66,7 +74,8 @@ def main():
     lat = sorted(r.latency_s for r in results)
     p50 = lat[len(lat) // 2]
     p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
-    print(f"arch={cfg.name} requests={len(results)} slots={args.slots} "
+    print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
+          f"quant={eng.cfg.quant} requests={len(results)} slots={args.slots} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
           f"throughput={stats.tokens_per_s:.1f} tok/s "
           f"p50={p50:.2f}s p99={p99:.2f}s")

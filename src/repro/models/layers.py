@@ -1,10 +1,16 @@
 """Reference (pure-jnp) transformer layers.
 
-These are the dry-run / oracle implementations: every op is a plain einsum /
-elementwise so the lowered HLO is analyzable by ``cost_analysis`` and the
-Pallas kernels in ``repro.kernels`` can be validated against them.  The
-launcher switches GEMM-heavy paths to the CGRA block-GEMM kernels via
-``cfg.kernel_mode`` (see ``repro.core.gemm``).
+``cfg.kernel_mode`` selects the implementation of every GEMM-heavy op:
+
+- ``reference`` — plain jnp einsum/matmul (dry-run oracle; the lowered HLO is
+  analyzable by ``cost_analysis`` and the Pallas kernels validate against it)
+- ``interpret`` — the Pallas CGRA block-GEMM / flash-attention kernels run
+  through the interpreter (CPU validation of the exact kernel math)
+- ``pallas`` — the compiled TPU kernels (the serving hot path)
+
+All dense projections funnel through :func:`dense_proj` (which also serves
+int8 ``QTensor`` weights, ``cfg.quant == "w8a8"``) and forward/prefill
+attention through :func:`dispatch_attend`; see DESIGN.md §2/§6.
 """
 from __future__ import annotations
 
@@ -17,6 +23,10 @@ from jax import lax
 import functools
 
 from repro.configs.base import ArchConfig
+from repro.core import round_up
+from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
+from repro.core.quant import QTensor
+from repro.kernels.ops import attention as kernel_attention
 from repro.launch.sharding import constrain, current_mesh
 from repro.models.params import ParamSpec
 
@@ -31,6 +41,68 @@ import contextvars
 
 ATTN_STUB: contextvars.ContextVar = contextvars.ContextVar("attn_stub",
                                                            default=False)
+
+
+# ---------------------------------------------------------------------------
+# Dense projection — the single GEMM choke point of the model.
+#
+# Every weight-activation matmul (q/k/v/o projections, MLP, MLA low-rank
+# projections, LM head) funnels through ``dense_proj`` so ``cfg.kernel_mode``
+# selects the jnp reference path, the Pallas interpret path (CPU validation)
+# or the compiled TPU block-GEMM — and pre-quantized ``QTensor`` weights
+# (``cfg.quant == "w8a8"``, see ``models.model.quantize_params``) serve
+# through the packed int8 kernel with its fused dequant epilogue.  MoE expert
+# GEMMs stay on their einsum dispatch path (batched over experts).
+# ---------------------------------------------------------------------------
+
+
+def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = ()):
+    """x: [..., K] @ w -> [..., N] (or [..., *out_shape] with N = prod).
+
+    ``w`` is either a float weight whose dims reshape row-major to [K, N]
+    (e.g. wq: [D,H,dh] -> [D, H*dh]; wo: [H,dh,D] -> [H*dh, D] with the
+    caller flattening x's head dims), or a ``QTensor`` holding the int8
+    quantization of that same [K, N] reshape.
+    """
+    Kdim = x.shape[-1]
+    if isinstance(w, QTensor):
+        w2 = QTensor(w.q.reshape(Kdim, -1), w.scale.reshape(1, -1))
+        out = cgra_gemm_w8a8(x, w2, mode=cfg.kernel_mode,
+                             out_dtype=cfg.compute_dtype)
+    else:
+        w2 = w.reshape(Kdim, -1).astype(cfg.compute_dtype)
+        out = cgra_gemm(x, w2, mode=cfg.kernel_mode)
+    if out_shape:
+        out = out.reshape(*out.shape[:-1], *out_shape)
+    return out
+
+
+def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
+                    window: int = 0, chunk: int = 0, softcap: float = 0.0):
+    """kernel_mode-aware attention core.  Layout as ``attend``:
+    q [B,Sq,H,d], k/v [B,Sk,K,d] -> [B,Sq,H,d].
+
+    The flash kernel path covers the contiguous self/cross-attention pattern
+    used by forward/prefill (positions are aranges, last query aligned with
+    last key — exactly ``attend``'s mask for these call sites), preserving
+    GQA grouping, sliding windows and logit softcap.  The jnp ``attend``
+    stays the oracle for ``kernel_mode="reference"`` and for the roofline
+    ATTN_STUB traffic stand-in; MLA keeps ``attend`` unconditionally
+    (its q/v head dims differ, which the kernel accumulator does not model).
+
+    Differentiability: the block GEMMs are trainable in every mode
+    (``cgra_matmul`` carries a custom VJP) but the flash kernel has no VJP —
+    train/finetune with ``kernel_mode="reference"``; interpret/pallas are
+    the inference (serving) modes.
+    """
+    if cfg.kernel_mode == "reference" or ATTN_STUB.get():
+        return attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                      chunk=chunk, softcap=softcap)
+    o = kernel_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        softcap=softcap, mode=cfg.kernel_mode)
+    return o.transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -160,9 +232,10 @@ def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict:
 
 
 def _qkv(cfg, p, xq, xkv):
-    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cfg.compute_dtype))
-    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cfg.compute_dtype))
-    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cfg.compute_dtype))
+    H, K, dh = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense_proj(cfg, xq, p["wq"], (H, dh))
+    k = dense_proj(cfg, xkv, p["wk"], (K, dh))
+    v = dense_proj(cfg, xkv, p["wv"], (K, dh))
     if "q_norm" in p:
         q = rms_only(q, p["q_norm"])
         k = rms_only(k, p["k_norm"])
@@ -184,10 +257,11 @@ def attn_forward(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     k = rope(k, positions, theta)
     causal = cfg.kind == "decoder"
     window = cfg.window_size if local else 0
-    o = attend(q, k, v, positions, positions, causal=causal, window=window,
-               chunk=attn_chunk, softcap=cfg.logit_softcap)
+    o = dispatch_attend(cfg, q, k, v, positions, positions, causal=causal,
+                        window=window, chunk=attn_chunk,
+                        softcap=cfg.logit_softcap)
     o = constrain(o, ("batch", None, "heads", None))
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
 
 
 def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int, local: bool) -> dict:
@@ -207,9 +281,10 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     q = rope(q, positions, theta)
     k = rope(k, positions, theta)
     window = cfg.window_size if local else 0
-    o = attend(q, k, v, positions, positions, causal=True, window=window,
-               chunk=attn_chunk, softcap=cfg.logit_softcap)
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    o = dispatch_attend(cfg, q, k, v, positions, positions, causal=True,
+                        window=window, chunk=attn_chunk,
+                        softcap=cfg.logit_softcap)
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     if window and k.shape[1] > window:
         # ring-buffer cache: keep the last `window` keys, rolled so entry
         # (pos % window) holds absolute position pos — decode continues the
@@ -226,7 +301,11 @@ def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
     its own offset).
 
     Local layers use a ring-buffer cache of size `window` (write at
-    ``pos % window``); global layers write at ``pos``.
+    ``pos % window``); global layers write at ``pos``.  A global-layer write
+    at ``pos >= S`` is *dropped* (``mode="drop"``) rather than clamped onto
+    the last slot — overrunning the cache must never corrupt slot ``S-1``;
+    the serving engine refuses to decode past capacity (explicit length
+    error) before this can happen.
     """
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
@@ -235,10 +314,12 @@ def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
     q = rope(q, pos[:, None], theta)
     k_new = rope(k_new, pos[:, None], theta)
     S = cache["k"].shape[1]
-    widx = (pos % S) if (local and cfg.window_size) else jnp.minimum(pos, S - 1)
+    widx = (pos % S) if (local and cfg.window_size) else pos
     bidx = jnp.arange(B)
-    k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype))
-    v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype))
+    k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype),
+                                      mode="drop")
+    v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype),
+                                      mode="drop")
     # validity mask: slot j valid iff it has been written (j <= pos when not
     # yet wrapped; all valid once wrapped).  RoPE is pre-applied to cached
     # keys, so scores need no position reconstruction.
@@ -255,8 +336,8 @@ def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
     s = jnp.where(valid, s, NEG_INF)
     s = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
-    o = o.reshape(B, 1, H, v.shape[-1])
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    o = o.reshape(B, 1, H * v.shape[-1])
+    out = dense_proj(cfg, o, p["wo"])
     return out, {"k": k, "v": v}
 
 
@@ -281,9 +362,8 @@ def mla_specs(cfg: ArchConfig) -> dict:
 
 def _mla_q(cfg, p, x, positions):
     dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
-    cq = rms_only(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cfg.compute_dtype)),
-                  p["q_norm"])
-    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cfg.compute_dtype))
+    cq = rms_only(dense_proj(cfg, x, p["wq_a"]), p["q_norm"])
+    q = dense_proj(cfg, cq, p["wq_b"], (cfg.padded_heads, dn + dr))
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope
@@ -291,7 +371,7 @@ def _mla_q(cfg, p, x, positions):
 
 def _mla_latent(cfg, p, x, positions):
     kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
-    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cfg.compute_dtype))
+    ckv = dense_proj(cfg, x, p["wkv_a"])
     latent, k_rope = ckv[..., :kvr], ckv[..., kvr:]
     latent = rms_only(latent, p["kv_norm"])
     k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
@@ -302,15 +382,16 @@ def mla_forward(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
     dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     q_nope, q_rope = _mla_q(cfg, p, x, positions)
     latent, k_rope = _mla_latent(cfg, p, x, positions)
-    kv = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"].astype(cfg.compute_dtype))
+    kv = dense_proj(cfg, latent, p["wkv_b"], (cfg.padded_heads, dn + dv))
     k_nope, v = kv[..., :dn], kv[..., dn:]
     H = k_nope.shape[2]
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, k_rope.shape[-1]))
     q = jnp.concatenate([q_nope, q_rope], -1)
     k = jnp.concatenate([k_nope, k_rope_b], -1)
+    # MLA stays on the jnp attend core: q/k head dim (dn+dr) != v head dim
     o = attend(q, k, v, positions, positions, causal=(cfg.kind == "decoder"),
                chunk=attn_chunk)
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
 
 
 def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
@@ -340,11 +421,12 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
     q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])  # [B,1,H,dn],[B,1,H,dr]
     latent_new, k_rope_new = _mla_latent(cfg, p, x, pos[:, None])
     bidx = jnp.arange(B)
-    widx = jnp.minimum(pos, cache["latent"].shape[1] - 1)
-    latent = cache["latent"].at[bidx, widx].set(
-        latent_new[:, 0].astype(cache["latent"].dtype))
-    k_rope = cache["k_rope"].at[bidx, widx].set(
-        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+    # out-of-capacity writes are dropped, never clamped onto the last row
+    # (same invariant as attn_decode; the engine errors before this happens)
+    latent = cache["latent"].at[bidx, pos].set(
+        latent_new[:, 0].astype(cache["latent"].dtype), mode="drop")
+    k_rope = cache["k_rope"].at[bidx, pos].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype), mode="drop")
     wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
     wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
@@ -358,7 +440,7 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
     s = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", s.astype(latent.dtype), latent)
     o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)  # expand to v space
-    out = jnp.einsum("bshd,hdk->bsk", o, p["wo"].astype(cfg.compute_dtype))
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     return out, {"latent": latent, "k_rope": k_rope}
 
 
@@ -375,19 +457,21 @@ def cross_attn_specs(cfg: ArchConfig) -> dict:
 def cross_attn(cfg: ArchConfig, p: dict, x, img, img_kv=None):
     """x: [B,S,D] text hidden; img: [B,T,D] projected image embeddings.
     Returns (out, (k, v)) so decode can reuse the static cross KV."""
+    H, K, dh = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
     if img_kv is None:
-        k = jnp.einsum("btd,dhk->bthk", img, p["wk"].astype(cfg.compute_dtype))
-        v = jnp.einsum("btd,dhk->bthk", img, p["wv"].astype(cfg.compute_dtype))
+        k = dense_proj(cfg, img, p["wk"], (K, dh))
+        v = dense_proj(cfg, img, p["wv"], (K, dh))
         if "q_norm" in p:
             k = rms_only(k, p["k_norm"])
     else:
         k, v = img_kv
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.compute_dtype))
+    q = dense_proj(cfg, x, p["wq"], (H, dh))
     if "q_norm" in p:
         q = rms_only(q, p["q_norm"])
     Sq, T = q.shape[1], k.shape[1]
-    o = attend(q, k, v, jnp.arange(Sq), jnp.arange(T), causal=False)
-    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    o = dispatch_attend(cfg, q, k, v, jnp.arange(Sq), jnp.arange(T),
+                        causal=False)
+    o = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     return jnp.tanh(p["gate"].astype(F32)).astype(o.dtype) * o, (k, v)
 
 
@@ -419,13 +503,13 @@ def ffn_forward(cfg: ArchConfig, p: dict, x):
     dt = cfg.compute_dtype
     kind = ffn_kind(cfg)
     if kind == "gelu_mlp":
-        h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+        h = dense_proj(cfg, x, p["w1"]) + p["b1"].astype(dt)
         h = jax.nn.gelu(h)
-        return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt)) + p["b2"].astype(dt)
-    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
-    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        return dense_proj(cfg, h, p["w2"]) + p["b2"].astype(dt)
+    g = dense_proj(cfg, x, p["w_gate"])
+    u = dense_proj(cfg, x, p["w_up"])
     act = jax.nn.gelu(g, approximate=True) if kind == "geglu" else jax.nn.silu(g)
-    return jnp.einsum("bsf,fd->bsd", act * u, p["w_down"].astype(dt))
+    return dense_proj(cfg, act * u, p["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -444,14 +528,10 @@ def moe_specs(cfg: ArchConfig) -> dict:
     }
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 def moe_capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
     c = int(tokens_per_group * cfg.experts_per_token * cfg.capacity_factor
             / cfg.num_experts)
-    return max(4, _round_up(max(c, 1), 4))
+    return max(4, round_up(max(c, 1), 4))
 
 
 def _moe_expert_block(xt, wk3, idx3, sel3, pos3, wg, wu, wd, *, E_l: int,

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig, LayerSpec, Stage
+from repro.core.quant import QTensor
 from repro.launch.sharding import constrain
 from repro.models import layers as L
 from repro.models import ssd as S
@@ -75,6 +76,66 @@ def init(cfg: ArchConfig, rng) -> dict:
 
 def param_shapes(cfg: ArchConfig, main_repeats: int | None = None):
     return shape_tree(param_specs(cfg, main_repeats), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# w8a8 weight quantization (one-time, at load)
+# ---------------------------------------------------------------------------
+
+# every weight consumed by ``layers.dense_proj``; anything else (norm scales,
+# embeddings, RoPE-free SSM params, MoE expert tensors — batched einsum path,
+# MLA's wq_b/wkv_b — needed in float for absorbed decode) stays float
+_QUANT_NAMES = frozenset({"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                          "w1", "w2", "wq_a", "wkv_a", "lm_head"})
+
+
+def _quantize_weight(w, red_axes: tuple) -> QTensor:
+    """Symmetric int8 over ``red_axes`` (the contraction dims): per-output-
+    channel scales, broadcastable against the original weight shape."""
+    wf = w.astype(F32)
+    amax = jnp.max(jnp.abs(wf), axis=red_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(F32))
+
+
+def quantize_params(cfg: ArchConfig, params: dict) -> dict:
+    """Quantize every GEMM weight to int8 once at load (``quant="w8a8"``).
+
+    Returns a params tree where each ``dense_proj`` weight is a ``QTensor``
+    (int8 values + per-output-channel f32 scales, stacked-layer leading axis
+    preserved so ``lax.scan`` slices it like any other param); activations
+    are quantized per-row on the fly inside ``cgra_gemm_w8a8``.  Idempotent —
+    already-quantized leaves pass through.  Inference-only: the int8 tree is
+    not differentiable.
+    """
+    def walk(tree, stacked: bool):
+        if not isinstance(tree, dict):
+            return tree
+        if "router" in tree:  # MoE expert weights stay on the einsum path
+            return tree
+        out = {}
+        for name, v in tree.items():
+            if isinstance(v, dict):
+                out[name] = walk(v, stacked)
+            elif (name in _QUANT_NAMES and not isinstance(v, QTensor)
+                  and getattr(v, "ndim", 0) >= 2):
+                s = 1 if stacked else 0  # skip the scanned layers axis
+                red = tuple(range(s, v.ndim - 1)) if name == "wo" else (s,)
+                out[name] = _quantize_weight(v, red)
+            else:
+                out[name] = v
+        return out
+
+    new = dict(params)
+    new["stages"] = [walk(st, True) for st in params["stages"]]
+    if "lm_head" in params and not isinstance(params["lm_head"], QTensor):
+        new["lm_head"] = _quantize_weight(params["lm_head"], (0,))
+    if cfg.tie_embeddings and "lm_head_q" not in params:
+        # tied head: the embedding stays float (it is a gather table), but
+        # the head GEMM gets its own int8 copy of embed.T (1/4 the bytes)
+        new["lm_head_q"] = _quantize_weight(params["embed"].T, (0,))
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -267,8 +328,12 @@ def project_images(cfg: ArchConfig, params, batch: dict):
 
 
 def lm_logits(cfg: ArchConfig, params, hidden):
-    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = jnp.einsum("bsd,dv->bsv", hidden, head.astype(cfg.compute_dtype))
+    if cfg.tie_embeddings:
+        head = params.get("lm_head_q", None)  # w8a8: int8 copy of embed.T
+        head = params["embed"].T if head is None else head
+    else:
+        head = params["lm_head"]
+    logits = L.dense_proj(cfg, hidden, head)
     return constrain(logits, ("batch", "seq", "vocab"))
 
 

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
+from repro.core import round_up
 from repro.models import model as M
 from repro.models.params import is_spec
 
@@ -45,10 +46,6 @@ def bytes_tokenizer_encode(text: str, vocab: int) -> list[int]:
 
 def bytes_tokenizer_decode(tokens) -> str:
     return bytes(int(t) % 256 for t in tokens).decode("utf-8", errors="replace")
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
 
 
 def grow_cache(cfg: ArchConfig, caches, new_len: int):
@@ -146,12 +143,24 @@ class Engine:
                     with the host — evict/admit — once per chunk)
     eos_id:         optional stop token (checked inside the scan)
     max_queue:      admission-control bound; ``submit`` refuses beyond it
+    kernel_mode:    override ``cfg.kernel_mode`` (reference | interpret |
+                    pallas) for the prefill and decode-chunk hot paths
+    quant:          override ``cfg.quant``; ``"w8a8"`` quantizes the GEMM
+                    weights once here (``model.quantize_params``) and serves
+                    prefill + decode through the packed int8 kernels
     """
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 512, *,
                  max_slots: int = 8, prefill_bucket: int = 32,
                  decode_chunk: int = 8, eos_id: int | None = None,
-                 max_queue: int = 1024):
+                 max_queue: int = 1024, kernel_mode: str | None = None,
+                 quant: str | None = None):
+        if kernel_mode is not None:
+            cfg = cfg.with_(kernel_mode=kernel_mode)
+        if quant is not None:
+            cfg = cfg.with_(quant=quant)
+        if cfg.quant == "w8a8":
+            params = M.quantize_params(cfg, params)  # idempotent
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.prefill_bucket = prefill_bucket
@@ -259,7 +268,7 @@ class Engine:
 
     def padded_len(self, prompt_len: int) -> int:
         return max(self.prefill_bucket,
-                   _round_up(prompt_len, self.prefill_bucket))
+                   round_up(prompt_len, self.prefill_bucket))
 
     def submit(self, prompt: list[int], max_new: int = 32,
                temperature: float = 0.0, seed: int = 0) -> int:
@@ -326,11 +335,30 @@ class Engine:
             s.first_token_s, now))
         self._slots[i] = None
 
+    def _check_capacity(self):
+        """Refuse to decode a slot past its KV capacity.
+
+        Global-attention layers write cache row ``pos``; a write at
+        ``pos >= max_len`` is dropped by ``attn_decode`` (never clamped onto
+        the last row), so reaching this state means lost context — the
+        admission bound (``submit``) should have made it impossible.  Surface
+        it as an explicit length error instead of silently degrading.
+        """
+        steps = np.minimum(self._remaining, self.decode_chunk)
+        for i, slot in enumerate(self._slots):
+            if slot is not None and self._pos[i] + steps[i] > self.max_len:
+                raise RuntimeError(
+                    f"slot {i} (rid={slot.req.rid}): decoding {int(steps[i])} "
+                    f"steps from pos={int(self._pos[i])} overruns KV capacity "
+                    f"max_len={self.max_len}; request length accounting is "
+                    f"inconsistent with admission control")
+
     def step(self) -> list[RequestResult]:
         """One scheduling iteration: admit into free slots, run one compiled
         decode chunk, evict finished sequences.  Returns newly finished."""
         self._admit()
         if self.num_active:
+            self._check_capacity()
             before = self._remaining.copy()
             t0 = time.time()
             (self._caches, cur, pos, remaining, keys, toks) = self._decode_fn(
@@ -376,7 +404,9 @@ class Engine:
         prompt + generated for ``prompts[i]``."""
         t_stats = ServeStats(prefill_s=-self.stats.prefill_s,
                              decode_s=-self.stats.decode_s,
-                             tokens_out=-self.stats.tokens_out)
+                             tokens_out=-self.stats.tokens_out,
+                             prefills=-self.stats.prefills,
+                             chunks=-self.stats.chunks)
         rids = [self.submit(p, max_new, temperature, seed=seed * 1000003 + i)
                 for i, p in enumerate(prompts)]
         by_rid = {r.rid: r for r in self.run()}
@@ -384,4 +414,6 @@ class Engine:
         t_stats.prefill_s += self.stats.prefill_s
         t_stats.decode_s += self.stats.decode_s
         t_stats.tokens_out += self.stats.tokens_out
+        t_stats.prefills += self.stats.prefills
+        t_stats.chunks += self.stats.chunks
         return out, t_stats

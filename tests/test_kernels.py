@@ -1,5 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-swept over shapes and dtypes, plus hypothesis property tests."""
+swept over shapes and dtypes, plus hypothesis property tests and the
+kernel-vs-model parity suite (flash_attention against ``layers.attend``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +12,8 @@ from repro.core.quant import dequantize, quantize
 from repro.kernels import ref
 from repro.kernels.block_gemm import block_gemm, block_gemm_int8
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import cgra_matmul
+from repro.kernels.ops import attention, cgra_matmul
+from repro.models.layers import attend
 
 RNG = np.random.RandomState(0)
 
@@ -115,6 +117,92 @@ def test_flash_attention_dtypes(dtype):
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), atol=2e-2)
+
+
+@pytest.mark.parametrize("Sq,Sk", [(100, 100), (77, 77), (130, 130),
+                                   (200, 200), (96, 160)])
+def test_flash_attention_ragged_shapes(Sq, Sk):
+    """Arbitrary (non-block-multiple) lengths: padded up to the block grid,
+    padded keys masked, output sliced back — no assertion errors."""
+    q = jnp.asarray(RNG.randn(1, 4, Sq, 32) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 2, Sk, 32) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 2, Sk, 32) * 0.3, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1),
+                                   causal=True)
+    assert out.shape == (1, 4, Sq, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_flash_attention_fully_masked_rows_are_zero():
+    """Causal with Sq > Sk: the first Sq-Sk-? queries precede every key, so
+    their rows are fully masked and must come out exactly zero (the old
+    kernel returned mean(V): exp(s - m) == 1 when m never left -inf)."""
+    Sq, Sk = 64, 32
+    q = jnp.asarray(RNG.randn(1, 2, Sq, 32) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 2, Sk, 32) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 2, Sk, 32) + 5.0, jnp.float32)  # mean(V) != 0
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    # query row i attends keys kpos <= i + (Sk - Sq); rows i < Sq-Sk see none
+    masked = np.asarray(out[:, :, : Sq - Sk])
+    assert np.all(masked == 0.0), np.abs(masked).max()
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-3)
+
+
+@pytest.mark.parametrize("softcap", [20.0, 50.0])
+def test_flash_attention_softcap(softcap):
+    q = jnp.asarray(RNG.randn(1, 4, 128, 32), jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 4, 128, 32), jnp.float32)
+    v = jnp.asarray(RNG.randn(1, 4, 128, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, softcap=softcap,
+                          bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs model parity: ops.attention (interpret) against layers.attend —
+# the jnp core the model actually validates against — across the
+# causal/window/GQA/softcap/ragged grid, in the model's [B,S,H,d] layout.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,K,window,softcap", [
+    (128, 4, 4, 0, 0.0),
+    (128, 8, 2, 0, 0.0),    # GQA 4:1
+    (96, 4, 2, 32, 0.0),    # sliding window, ragged
+    (100, 4, 4, 0, 30.0),   # softcap (Gemma-3 style), ragged
+    (130, 6, 2, 48, 20.0),  # everything at once
+])
+def test_attention_matches_attend(S, H, K, window, softcap):
+    d = 16
+    q = jnp.asarray(RNG.randn(2, S, H, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(2, S, K, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(2, S, K, d) * 0.3, jnp.float32)
+    pos = jnp.arange(S)
+    want = attend(q, k, v, pos, pos, causal=True, window=window,
+                  softcap=softcap)
+    got = attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=True, window=window,
+                    softcap=softcap, mode="interpret", bq=64, bk=64
+                    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_w8a8_within_quant_error_of_fp32():
+    """cgra_gemm_w8a8 (interpret) vs the fp32 GEMM: median relative error
+    bounded by int8 quantization noise."""
+    x = jnp.asarray(RNG.randn(96, 160), jnp.float32)
+    w = jnp.asarray(RNG.randn(160, 90), jnp.float32)
+    wq = quantize(w, axis=-1)
+    got = np.asarray(cgra_gemm_w8a8(x, wq, mode="interpret"))
+    want = np.asarray(x @ w)
+    rel = np.abs(got - want) / (np.abs(want) + 1.0)
+    assert np.median(rel) < 0.02, np.median(rel)
+    assert np.max(rel) < 0.5, np.max(rel)
 
 
 # ---------------------------------------------------------------------------

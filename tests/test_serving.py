@@ -169,3 +169,46 @@ def test_per_request_temperature_and_seed(olmo):
     r2 = eng.submit(p, max_new=10, temperature=1.0, seed=2)
     res = {r.rid: r for r in eng.run()}
     assert res[r1].generated != res[r2].generated
+
+
+def test_decode_past_capacity_is_explicit_error(olmo):
+    """A slot whose length accounting would overrun its KV capacity must
+    surface an explicit error, never silently drop/overwrite cache rows
+    (global layers used to clamp the write index onto the last row)."""
+    cfg, params = olmo
+    eng = Engine(cfg, params, max_len=32, max_slots=1, prefill_bucket=16,
+                 decode_chunk=4)
+    eng.submit(_prompts(cfg, ["overrun"])[0], max_new=8)  # legal: 16+8 <= 32
+    eng.step()
+    assert eng.num_active == 1
+    eng._remaining[0] = 1000  # simulate corrupted length accounting
+    with pytest.raises(RuntimeError, match="overruns KV capacity"):
+        while eng.num_active:
+            eng.step()
+
+
+def test_engine_w8a8_serves_full_budget(olmo):
+    """quant="w8a8": weights quantized once at engine construction; prefill
+    and scan-decode run through the packed int8 GEMM path end to end."""
+    from repro.core.quant import QTensor
+    cfg, params = olmo
+    eng = Engine(cfg, params, max_len=96, max_slots=2, prefill_bucket=16,
+                 decode_chunk=4, quant="w8a8")
+    assert eng.cfg.quant == "w8a8"
+    assert isinstance(eng.params["lm_head"], QTensor)
+    prompts = _prompts(cfg, ["int8 one", "int8 two", "int8 three"])
+    out, _ = eng.generate(prompts, max_new=6)
+    for p, seq in zip(prompts, out):
+        assert len(seq) == len(p) + 6
+        assert all(0 <= t < cfg.vocab_size for t in seq)
+
+
+def test_engine_kernel_mode_override(olmo):
+    """kernel_mode is threaded from the engine into prefill + decode; the
+    reference override must reproduce the default engine token-for-token."""
+    cfg, params = olmo
+    a = Engine(cfg, params, max_len=96, max_slots=1, prefill_bucket=16)
+    b = Engine(cfg, params, max_len=96, max_slots=1, prefill_bucket=16,
+               kernel_mode="reference")
+    p = _prompts(cfg, ["kernel mode"])[0]
+    assert a.generate([p], max_new=5)[0] == b.generate([p], max_new=5)[0]
