@@ -1,8 +1,8 @@
 """End-to-end kernel_mode sweep on the edge-transformer config.
 
-Runs the full model (forward + prefill) on ``cgra-edge`` under every
-execution mode the kernel stack supports and reports wall time plus accuracy
-against the fp32 reference path:
+Runs the full model (forward + prefill + steady-state decode) on
+``cgra-edge`` under every execution mode the kernel stack supports and
+reports wall time plus accuracy against the fp32 reference path:
 
 - ``reference``          — jnp einsum/matmul oracle
 - ``interpret``          — Pallas CGRA kernels through the interpreter (CPU;
@@ -13,7 +13,14 @@ against the fp32 reference path:
 - ``w8a8 interpret/pallas`` — same, through ``block_gemm_int8``'s fused
                            dequant epilogue
 
-    PYTHONPATH=src python benchmarks/kernel_mode_sweep.py [--seq 64] [--iters 3]
+The decode column is the serving steady state: a batch of ``--slots``
+sequences prefilled to ``--seq``, then ``--decode-steps`` single-token
+``decode_step`` calls fused in a ``lax.scan`` (the engine's decode-chunk
+shape), reported as decoded tokens/s per kernel_mode — flash-decode reads
+only the live cache region, so this is the number the decode kernel moves.
+
+    PYTHONPATH=src python benchmarks/kernel_mode_sweep.py [--seq 64] \
+        [--iters 3] [--slots 4] [--decode-steps 8]
 """
 import argparse
 import time
@@ -34,7 +41,38 @@ def _time(fn, iters: int) -> float:
     return (time.time() - t0) / iters * 1e3  # ms
 
 
-def run(seq: int = 64, iters: int = 3) -> list[str]:
+def _decode_steady_state_fn(cfg, params, slots: int, seq: int, steps: int):
+    """Build the engine-shaped decode chunk: prefill ``slots`` sequences to
+    ``seq`` rows of a ``[slots, seq + steps]`` cache, then scan ``steps``
+    fused single-token decodes.  Returns (jitted fn over (params, caches),
+    initial caches, tokens/s divisor)."""
+    from jax import lax
+
+    from repro.serving.engine import grow_cache
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (slots, seq), 0,
+                              cfg.vocab_size)
+    _, caches = M.prefill(cfg, params, {"tokens": toks})
+    caches = grow_cache(cfg, caches, seq + steps)
+    pos0 = jnp.full((slots,), seq, jnp.int32)
+    cur0 = toks[:, -1]
+
+    def chunk(p, c):
+        def body(carry, _):
+            c, cur, pos = carry
+            logits, c = M.decode_step(cfg, p, c, cur[:, None], pos)
+            nxt = jnp.argmax(
+                logits[:, -1, : cfg.vocab_size], -1).astype(jnp.int32)
+            return (c, nxt, pos + 1), nxt
+
+        (_, _, _), out = lax.scan(body, (c, cur0, pos0), None, length=steps)
+        return out
+
+    return jax.jit(chunk), caches, slots * steps
+
+
+def run(seq: int = 64, iters: int = 3, slots: int = 4,
+        decode_steps: int = 8) -> list[str]:
     cfg = get_config("cgra-edge")
     params = M.init(cfg, jax.random.PRNGKey(0))
     params_q = M.quantize_params(cfg, params)
@@ -53,8 +91,10 @@ def run(seq: int = 64, iters: int = 3) -> list[str]:
     ref_argmax = np.argmax(ref[:, :, : cfg.vocab_size], -1)
 
     out = [f"# kernel_mode sweep — {cfg.name}, B=1 S={seq}, "
+           f"decode: {slots} slots x {decode_steps} steps, "
            f"backend={jax.default_backend()}"]
-    out.append("mode,forward_ms,prefill_ms,max_abs_dlogits,argmax_agree")
+    out.append("mode,forward_ms,prefill_ms,decode_toks_per_s,"
+               "max_abs_dlogits,argmax_agree")
     sweep = [("reference", cfg, params), ("interpret",
              cfg.with_(kernel_mode="interpret"), params)]
     if on_tpu:
@@ -74,7 +114,12 @@ def run(seq: int = 64, iters: int = 3) -> list[str]:
         fwd_ms = _time(jax.jit(logits_fn(c, p)), iters)
         pre_ms = _time(jax.jit(lambda c=c, p=p: M.prefill(c, p, batch)[0]),
                        iters)
-        out.append(f"{name},{fwd_ms:.1f},{pre_ms:.1f},{dmax:.2e},{agree:.3f}")
+        dec_fn, caches, ntoks = _decode_steady_state_fn(
+            c, p, slots, seq, decode_steps)
+        dec_ms = _time(lambda: dec_fn(p, caches), iters)
+        toks_s = ntoks / (dec_ms / 1e3)
+        out.append(f"{name},{fwd_ms:.1f},{pre_ms:.1f},{toks_s:.0f},"
+                   f"{dmax:.2e},{agree:.3f}")
     if not on_tpu:
         out.append("# pallas (compiled) modes skipped: no TPU backend; "
                    "interpret mode executes the identical kernel math")
@@ -85,5 +130,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--decode-steps", type=int, default=8)
     a = ap.parse_args()
-    print("\n".join(run(a.seq, a.iters)))
+    print("\n".join(run(a.seq, a.iters, a.slots, a.decode_steps)))

@@ -1,0 +1,202 @@
+"""Batched single-token flash-decode as a Pallas TPU kernel.
+
+Decode is the serving hot path the paper's MOB/PE dataflow is actually about:
+one query row per sequence against a long KV cache, so the op is purely
+memory-bound and the win is reading *only the live cache region* exactly
+once.  This kernel is the decode-side counterpart of ``flash_attention``:
+
+- the KV cache is streamed in ``bk``-row blocks (the MOB prefetch pipeline),
+  with a running max/denominator online-softmax accumulator in VMEM so the
+  [H, S] score matrix never materializes (C4 data reuse);
+- per-slot ``pos`` (tokens decoded so far) and ``start`` (left-pad offset)
+  scalars ride in via scalar prefetch and drive in-kernel validity, so dead
+  cache rows — the slot's unwritten tail *and* the engine's left-pad rows —
+  never receive weight;
+- for the linear (global-attention) layout, k-blocks entirely outside the
+  live ``[start, pos]`` range are skipped outright: their compute is gated
+  by ``pl.when`` and their BlockSpec index remaps to a live block (repeat
+  visits elide the HBM->VMEM copy), so both score work and cache traffic
+  are bounded by the live length, not ``max_len``;
+- the ring (sliding-window) layout recovers each entry's absolute row from
+  ``pos`` in-kernel (entry ``j`` holds row ``pos - ((pos - j) mod S)``), so
+  wrapped caches need no reordering in HBM;
+- GQA folds the G query heads that share a kv head into the sublane axis
+  (one [G, d] x [d, bk] MXU call per block — no KV broadcast), and the
+  qk/v head dims may differ (MLA's latent-space decode: qk = kvr + rope,
+  v = kvr).
+
+A fully-invalid slot (``start > pos``, e.g. a drained engine slot) returns
+exact zeros, mirroring the masked-row contract of ``flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import round_up
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _fd_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, nk: int, bk: int, S: int,
+               layout: str, softcap: float, scale: float):
+    """One (batch-slot, kv-head, k-block) grid step.
+
+    ``S`` is the unpadded cache capacity; rows ``>= S`` are grid padding.
+    ``pos_ref``/``start_ref`` are the scalar-prefetched per-slot validity
+    bounds (cache row of the current token / first non-pad row).
+    """
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p_b = pos_ref[b]
+    s_b = start_ref[b]
+
+    if layout == "linear":
+        # live rows are exactly [start, pos]: skip blocks fully outside —
+        # the streamed score work is bounded by the live length, not S.
+        block_live = (ik * bk <= p_b) & (ik * bk + bk > s_b)
+    else:  # ring: live entries can sit anywhere in the buffer
+        block_live = (p_b >= s_b)
+
+    @pl.when(block_live)
+    def _block():
+        q = q_ref[0, 0]       # [Gp, dq]
+        k = k_ref[0, :, 0]    # [bk, dq]  (cache-native [B, S, K, d] layout)
+        v = v_ref[0, :, 0]    # [bk, dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        j = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if layout == "ring":
+            # entry j holds absolute row pos - ((pos - j) mod S): the last S
+            # writes, with entry (pos mod S) freshly holding row pos
+            a = p_b - jnp.mod(p_b - j, S)
+            valid = (a >= 0) & (a >= s_b)
+        else:
+            valid = (j >= s_b) & (j <= p_b)
+        valid &= j < S  # grid padding: ragged S rounded up to bk
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # rows with no valid key keep m_new == NEG, where the update above
+        # degenerates to exp(0) == 1 per entry; zero them so l stays 0 and
+        # the store emits exact zeros (empty-slot contract).
+        p = jnp.where(m_new > NEG * 0.5, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, pos, start=None, *, layout: str = "linear",
+                 softcap: float = 0.0, scale=None, bk: int = 128,
+                 dv: int | None = None, interpret: bool = False):
+    """q: [B, H, dq]; k: [B, S, K, dq]; v: [B, S, K, >=dv] -> [B, H, dv].
+
+    k/v arrive in the engine's *native* slot-cache layout ``[B, S, K, d]``
+    (seq-major) — the kernel blocks the S axis directly, so the hot path
+    never transposes or copies the cache.  ``pos``/``start``: [B] int32
+    per-slot validity bounds (broadcastable scalars accepted; ``start=None``
+    means no left-pad rows).  ``layout`` selects the cache validity rule:
+    ``"linear"`` (global attention, rows ``[start, pos]`` live) or ``"ring"``
+    (sliding window of size S, entry ``pos % S`` holding the current token).
+    H % K == 0 (GQA).  ``dv`` narrows the value read to the first ``dv``
+    columns of ``v`` via the BlockSpec (no slicing copy): MLA passes its
+    concatenated ``[latent | k_rope]`` cache as BOTH k and v, with the
+    latent (the value) being the first ``kv_lora_rank`` columns.
+    """
+    B, H, dq = q.shape
+    S, K = k.shape[1], k.shape[2]
+    dv = dv or v.shape[-1]
+    G = H // K
+    scale = scale if scale is not None else dq ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    start = (jnp.zeros((B,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
+    shared = v is k  # MLA dual-operand form: one cache array, two BlockSpecs
+    if k.dtype != q.dtype:  # serving caches share the compute dtype: no-op
+        k = k.astype(q.dtype)
+    if shared:
+        v = k
+    elif v.dtype != q.dtype:
+        v = v.astype(q.dtype)
+
+    # sublane-align the per-kv-head query group; padded rows are sliced off
+    Gp = round_up(G, 8)
+    qg = q.reshape(B, K, G, dq)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    bk_ = min(bk, S)
+    if S % bk_:
+        # prefer the largest sublane-aligned divisor of S (if a reasonable
+        # one exists) so the cache is never re-padded in HBM on the
+        # per-token hot path; awkward capacities fall back to grid padding
+        # + in-kernel masking
+        divs = [d for d in range(32, bk_ + 1) if S % d == 0 and d % 8 == 0]
+        if divs:
+            bk_ = max(divs)
+    Sp = round_up(S, bk_)
+    if Sp != S:
+        pads = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pads)
+        v = k if shared else jnp.pad(v, pads)
+    nk = Sp // bk_
+    grid = (B, K, nk)
+
+    def kv_map(b, kh, ik, pos_ref, start_ref):
+        if layout == "linear":
+            # dead k-blocks (outside [start, pos]) revisit a live block
+            # index instead: the grid pipeline elides the repeated DMA, so
+            # HBM traffic — the cost that dominates decode — is bounded by
+            # the live length, not the cache capacity.  The kernel skips
+            # their compute (block_live) so the remapped data is never read.
+            lo = jnp.minimum(start_ref[b] // bk_, nk - 1)
+            hi = jnp.minimum(pos_ref[b] // bk_, nk - 1)  # pos >= S: dropped
+            ik = jnp.clip(ik, lo, hi)
+        return (b, ik, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # pos, start
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, dq), lambda b, kh, ik, *_: (b, kh, 0, 0)),
+            pl.BlockSpec((1, bk_, 1, dq), kv_map),
+            pl.BlockSpec((1, bk_, 1, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, dv),
+                               lambda b, kh, ik, *_: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), F32),
+            pltpu.VMEM((Gp, 1), F32),
+            pltpu.VMEM((Gp, dv), F32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fd_kernel, nk=nk, bk=bk_, S=S, layout=layout,
+                          softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Gp, dv), q.dtype),
+        interpret=interpret,
+    )(pos, start, qg, k, v)
+    return out[:, :, :G].reshape(B, H, dv)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.block_gemm import block_gemm, block_gemm_int8
+from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention
 
 
@@ -44,15 +45,36 @@ def cgra_matmul_int8(a_q, b_q, a_scale, b_scale, mode: str = "reference",
                            interpret=(mode == "interpret"), out_dtype=out_dtype)
 
 
-def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, start=None,
               mode: str = "reference", bq=128, bk=128):
-    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok."""
+    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok.
+    ``start``: per-batch first live key row (left-pad exclusion)."""
     if mode == "reference":
         G = q.shape[1] // k.shape[1]
         kb = jnp.repeat(k, G, axis=1)
         vb = jnp.repeat(v, G, axis=1)
         return ref.flash_attention_ref(q, kb, vb, causal=causal, window=window,
-                                       softcap=softcap)
+                                       softcap=softcap, start=start)
     return flash_attention(q, k, v, causal=causal, window=window,
-                           softcap=softcap, bq=bq, bk=bk,
+                           softcap=softcap, start=start, bq=bq, bk=bk,
                            interpret=(mode == "interpret"))
+
+
+def attend_decode(q, k, v, pos, start=None, *, layout: str = "linear",
+                  softcap=0.0, scale=None, dv=None, mode: str = "reference",
+                  bk=128):
+    """Batched single-token decode over a slot-indexed KV cache.
+
+    Cache-native layout (no hot-path transposes): q: [B,H,dq];
+    k: [B,S,K,dq]; v: [B,S,K,>=dv] -> [B,H,dv].  ``pos``/``start`` are the
+    per-slot [B] validity bounds; ``layout`` is the cache layout ("linear"
+    global / "ring" sliding-window).  ``dv`` narrows the value read to the
+    first dv columns — MLA latent decode passes its concatenated
+    ``[latent | k_rope]`` cache as both k and v.
+    """
+    if mode == "reference":
+        return ref.flash_decode_ref(q, k, v, pos, start, layout=layout,
+                                    softcap=softcap, scale=scale, dv=dv)
+    return flash_decode(q, k, v, pos, start, layout=layout, softcap=softcap,
+                        scale=scale, dv=dv, bk=bk,
+                        interpret=(mode == "interpret"))

@@ -23,9 +23,11 @@ def block_gemm_int8_ref(a_q, b_q, a_scale, b_scale, out_dtype=F32):
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
-                        softcap=0.0):
+                        softcap=0.0, start=None):
     """q: [B,H,Sq,d], k/v: [B,H,Sk,d] (kv heads already broadcast).
-    Fully-masked rows return zeros (matching the Pallas kernel)."""
+    ``start``: per-batch [B] first live key row — rows ``< start`` are
+    left-pad KV and receive no weight.  Fully-masked rows return zeros
+    (matching the Pallas kernel)."""
     B, H, Sq, d = q.shape
     Sk = k.shape[2]
     scale = scale if scale is not None else d ** -0.5
@@ -39,7 +41,48 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
         mask &= kpos <= qpos + (Sk - Sq)  # align last query with last key
     if window:
         mask &= kpos > qpos + (Sk - Sq) - window
-    s = jnp.where(mask[None, None], s, -1e30)
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Sk))
+    if start is not None:
+        st = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+        mask &= kpos[None] >= st[:, None, None]
+    s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(mask[None, None], p, 0.0)  # all-masked row -> zeros, not 1/Sk
+    p = jnp.where(mask[:, None], p, 0.0)  # all-masked row -> zeros, not 1/Sk
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
+                     softcap=0.0, scale=None, dv=None):
+    """Oracle for ``flash_decode``: batched single-token decode over a
+    slot-indexed cache in its native layout.  q: [B,H,dq]; k: [B,S,K,dq];
+    v: [B,S,K,>=dv]; pos/start: [B] int32 (broadcastable).  ``layout``:
+    "linear" (rows ``[start, pos]`` live) or "ring" (entry j holds absolute
+    row ``pos - ((pos - j) mod S)``; live iff that row is
+    ``>= max(start, 0)``).  ``dv`` reads only the first dv value columns
+    (MLA passes one concatenated cache as both k and v).  All-invalid slots
+    return zeros."""
+    B, H, dq = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else dq ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    start = (jnp.zeros((B,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
+    if dv is not None:
+        v = v[..., :dv]
+    qg = q.reshape(B, K, G, dq)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k, preferred_element_type=F32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    j = jnp.arange(S)[None, :]
+    if layout == "ring":
+        a = pos[:, None] - jnp.mod(pos[:, None] - j, S)
+        valid = (a >= 0) & (a >= start[:, None])
+    else:
+        valid = (j >= start[:, None]) & (j <= pos[:, None])
+    vm = valid[:, None, None, :]
+    s = jnp.where(vm, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(vm, p, 0.0)  # all-invalid slot -> zeros
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    return o.reshape(B, H, v.shape[-1])

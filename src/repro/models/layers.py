@@ -9,8 +9,10 @@
 - ``pallas`` — the compiled TPU kernels (the serving hot path)
 
 All dense projections funnel through :func:`dense_proj` (which also serves
-int8 ``QTensor`` weights, ``cfg.quant == "w8a8"``) and forward/prefill
-attention through :func:`dispatch_attend`; see DESIGN.md §2/§6.
+int8 ``QTensor`` weights, ``cfg.quant == "w8a8"``), forward/prefill
+attention through :func:`dispatch_attend`, and single-token decode
+attention through :func:`dispatch_attend_decode` (the flash-decode kernel
+over the slot-indexed KV cache); see DESIGN.md §2/§6.
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ from repro.configs.base import ArchConfig
 from repro.core import round_up
 from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
 from repro.core.quant import QTensor
+from repro.kernels.ops import attend_decode as kernel_attend_decode
 from repro.kernels.ops import attention as kernel_attention
 from repro.launch.sharding import constrain, current_mesh
 from repro.models.params import ParamSpec
@@ -78,17 +81,22 @@ def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = ()):
 
 
 def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
-                    window: int = 0, chunk: int = 0, softcap: float = 0.0):
+                    window: int = 0, chunk: int = 0, softcap: float = 0.0,
+                    start=None):
     """kernel_mode-aware attention core.  Layout as ``attend``:
     q [B,Sq,H,d], k/v [B,Sk,K,d] -> [B,Sq,H,d].
 
     The flash kernel path covers the contiguous self/cross-attention pattern
-    used by forward/prefill (positions are aranges, last query aligned with
-    last key — exactly ``attend``'s mask for these call sites), preserving
-    GQA grouping, sliding windows and logit softcap.  The jnp ``attend``
-    stays the oracle for ``kernel_mode="reference"`` and for the roofline
-    ATTN_STUB traffic stand-in; MLA keeps ``attend`` unconditionally
-    (its q/v head dims differ, which the kernel accumulator does not model).
+    used by forward/prefill (positions are aranges — possibly shifted by a
+    per-row left-pad offset, which preserves all relative masks — with the
+    last query aligned with the last key), preserving GQA grouping, sliding
+    windows and logit softcap.  ``start`` is the per-batch first live key
+    row: rows below it are the serving engine's left-pad KV and must receive
+    no weight (the jnp path gets this for free from their negative
+    positions).  The jnp ``attend`` stays the oracle for
+    ``kernel_mode="reference"`` and for the roofline ATTN_STUB traffic
+    stand-in; MLA keeps ``attend`` unconditionally (its q/v head dims
+    differ, which the prefill kernel accumulator does not model).
 
     Differentiability: the block GEMMs are trainable in every mode
     (``cgra_matmul`` carries a custom VJP) but the flash kernel has no VJP —
@@ -101,8 +109,29 @@ def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
     o = kernel_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), causal=causal, window=window,
-        softcap=softcap, mode=cfg.kernel_mode)
+        softcap=softcap, start=start, mode=cfg.kernel_mode)
     return o.transpose(0, 2, 1, 3)
+
+
+def dispatch_attend_decode(cfg: ArchConfig, q, k, v, pos, start, *,
+                           layout: str = "linear", softcap: float = 0.0,
+                           scale=None, dv: int | None = None):
+    """kernel_mode-aware single-token decode core.
+
+    Cache-native layout in, model layout out: q [B,1,H,dq], cache k/v
+    [B,S,K,d] -> [B,1,H,dv] — the kernel blocks the cache's S axis
+    directly, so the hot path never transposes or copies it.
+    ``pos``/``start`` are the per-slot [B] validity bounds (cache row of
+    the current token / first non-pad row); ``layout`` selects the linear
+    (global) or ring (sliding-window) validity rule; ``dv`` narrows the
+    value read (MLA passes one concatenated cache as both k and v).
+    Routes to the jnp oracle (``reference``) or the flash-decode Pallas
+    kernel (``interpret`` | ``pallas``), which streams only live k-blocks.
+    """
+    o = kernel_attend_decode(q[:, 0], k, v, pos, start, layout=layout,
+                             softcap=softcap, scale=scale, dv=dv,
+                             mode=cfg.kernel_mode)
+    return o[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -162,13 +191,21 @@ def rope(x, positions, theta: float):
 # unchunked path used for the roofline cost compiles.
 # ---------------------------------------------------------------------------
 
-def _scores_mask(q_pos, k_pos, causal: bool, window: int):
-    """[Sq, Sk] additive mask from absolute positions."""
-    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), F32)
+def _valid_mask(q_pos, k_pos, causal: bool, window: int):
+    """Boolean key-validity mask from absolute positions.
+
+    ``q_pos``/``k_pos``: [S] (shared) or [B, S] (per-row — continuous
+    batching, where every slot carries its own left-pad offset).  Returns
+    [Sq, Sk] or [B, Sq, Sk].  Keys at negative positions are left-pad rows
+    (positions are ``arange - start``) and are invalid for every query.
+    """
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = kp >= 0
     if causal:
-        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+        m = m & (kp <= qp)
     if window:
-        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+        m = m & (kp > qp - window)
     return m
 
 
@@ -176,7 +213,9 @@ def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
            chunk: int = 0, softcap: float = 0.0):
     """q: [B,Sq,H,dq], k: [B,Sk,K,dq], v: [B,Sk,K,dv] -> [B,Sq,H,dv].
 
-    GQA: H q-heads grouped onto K kv-heads (H % K == 0).
+    GQA: H q-heads grouped onto K kv-heads (H % K == 0).  Positions may be
+    shared ([S]) or per-row ([B, S]); queries whose every key is masked
+    (e.g. left-pad rows) return zeros, matching the flash kernels.
     """
     B, Sq, H, dq = q.shape
     K = k.shape[2]
@@ -186,7 +225,7 @@ def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
     qg = q.reshape(B, Sq, K, G, dq)
 
     def _block(qb, q_pos_b):
-        # qb: [B, sq, K, G, dq]
+        # qb: [B, sq, K, G, dq]; q_pos_b: [sq] or [B, sq]
         if ATTN_STUB.get():  # flash-traffic stand-in: q/k/v read, o write
             vm = jnp.mean(v, axis=1)  # [B,K,dv]
             km = jnp.sum(jnp.mean(k, axis=1), -1, keepdims=True)  # consume k
@@ -197,16 +236,31 @@ def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
                            preferred_element_type=F32) * scale
             if softcap:
                 s = jnp.tanh(s / softcap) * softcap
-            s = s + _scores_mask(q_pos_b, k_pos, causal, window)[None, None, None]
+            mask = _valid_mask(q_pos_b, k_pos, causal, window)
+            if mask.ndim == 2:
+                mask = mask[None]
+            mb = mask[:, None, None]  # [B|1, 1, 1, sq, Sk] vs s [B,K,G,sq,Sk]
+            s = jnp.where(mb, s, NEG_INF)
             s = jax.nn.softmax(s, axis=-1)
+            s = jnp.where(mb, s, 0.0)  # all-masked rows -> zeros, not 1/Sk
             return jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
 
-    if chunk and Sq > chunk and Sq % chunk == 0:
-        nb = Sq // chunk
-        qb = qg.reshape(B, nb, chunk, K, G, dq).transpose(1, 0, 2, 3, 4, 5)
-        pb = q_pos.reshape(nb, chunk)
+    if chunk and Sq > chunk:
+        # pad the tail chunk so ragged Sq still runs blockwise (the padded
+        # query rows are computed and sliced off, like the Pallas grid pad)
+        pad = (-Sq) % chunk
+        qgp = jnp.pad(qg, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        nb = (Sq + pad) // chunk
+        qb = qgp.reshape(B, nb, chunk, K, G, dq).transpose(1, 0, 2, 3, 4, 5)
+        if q_pos.ndim == 2:  # per-row positions: [B, Sq] -> [nb, B, chunk]
+            pp = jnp.pad(q_pos, ((0, 0), (0, pad)), mode="edge")
+            pb = pp.reshape(B, nb, chunk).transpose(1, 0, 2)
+        else:
+            pp = jnp.pad(q_pos, (0, pad), mode="edge")
+            pb = pp.reshape(nb, chunk)
         out = lax.map(lambda args: _block(*args), (qb, pb))
-        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, dv)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pad, K, G, dv)
+        out = out[:, :Sq]
     else:
         out = _block(qg, q_pos)
     return out.reshape(B, Sq, H, dv)
@@ -274,8 +328,15 @@ def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int, local: bool) -> dict
 
 
 def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
-                 attn_chunk: int = 0):
-    """Returns (out, cache).  Cache keys are post-RoPE (standard practice)."""
+                 attn_chunk: int = 0, start=None):
+    """Returns (out, cache).  Cache keys are post-RoPE (standard practice).
+
+    ``positions`` may be [S] or, for left-pad-bucketed serving prefills,
+    [B, S] = ``arange(S) - start`` so real tokens sit at 0..len-1 and pad
+    rows at negative positions (excluded by the attention mask and by
+    decode validity; ``start`` feeds the same exclusion to the flash
+    kernel, which sees row indices, not positions).
+    """
     q, k, v = _qkv(cfg, p, x, x)
     theta = cfg.rope_theta if not local else 10_000.0
     q = rope(q, positions, theta)
@@ -283,7 +344,7 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     window = cfg.window_size if local else 0
     o = dispatch_attend(cfg, q, k, v, positions, positions, causal=True,
                         window=window, chunk=attn_chunk,
-                        softcap=cfg.logit_softcap)
+                        softcap=cfg.logit_softcap, start=start)
     out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     if window and k.shape[1] > window:
         # ring-buffer cache: keep the last `window` keys, rolled so entry
@@ -295,10 +356,13 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     return out, {"k": k, "v": v}
 
 
-def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
-    """One-token decode.  x: [B,1,D]; pos: scalar int32 or [B] int32 (tokens
-    decoded so far, per batch slot — continuous batching runs every slot at
-    its own offset).
+def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool,
+                start=None):
+    """One-token decode.  x: [B,1,D]; pos: scalar int32 or [B] int32 (cache
+    row of the current token, per batch slot — continuous batching runs
+    every slot at its own offset); ``start``: per-slot left-pad offset (the
+    first live cache row), so RoPE positions are ``pos - start`` and rows
+    ``< start`` never receive weight.
 
     Local layers use a ring-buffer cache of size `window` (write at
     ``pos % window``); global layers write at ``pos``.  A global-layer write
@@ -306,36 +370,33 @@ def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool):
     the last slot — overrunning the cache must never corrupt slot ``S-1``;
     the serving engine refuses to decode past capacity (explicit length
     error) before this can happen.
+
+    The attention core routes through :func:`dispatch_attend_decode`
+    (validity: linear rows ``[start, pos]``, ring entries recovered from
+    ``pos``); RoPE is pre-applied to cached keys, so scores need no
+    position reconstruction.
     """
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
+    start = (jnp.zeros((B,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
     q, k_new, v_new = _qkv(cfg, p, x, x)
     theta = cfg.rope_theta if not local else 10_000.0
-    q = rope(q, pos[:, None], theta)
-    k_new = rope(k_new, pos[:, None], theta)
+    rp = (pos - start)[:, None]  # logical position: pads carry no offset
+    q = rope(q, rp, theta)
+    k_new = rope(k_new, rp, theta)
     S = cache["k"].shape[1]
-    widx = (pos % S) if (local and cfg.window_size) else pos
+    ring = bool(local and cfg.window_size)
+    widx = (pos % S) if ring else pos
     bidx = jnp.arange(B)
     k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype),
                                       mode="drop")
     v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype),
                                       mode="drop")
-    # validity mask: slot j valid iff it has been written (j <= pos when not
-    # yet wrapped; all valid once wrapped).  RoPE is pre-applied to cached
-    # keys, so scores need no position reconstruction.
-    j = jnp.arange(S)
-    valid = jnp.where(pos[:, None] >= S, True, j[None, :] <= pos[:, None])
-    valid = valid[:, None, None, None, :]  # [B,1,1,1,S]
-    _, _, H, dq = q.shape
-    K = k.shape[2]
-    qg = q.reshape(B, 1, K, H // K, dq)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=F32)
-    s = s * (dq ** -0.5)
-    if cfg.logit_softcap:
-        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
-    s = jnp.where(valid, s, NEG_INF)
-    s = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
+    o = dispatch_attend_decode(cfg, q, k, v, pos, start,
+                               layout="ring" if ring else "linear",
+                               softcap=cfg.logit_softcap)
+    H = q.shape[2]
     o = o.reshape(B, 1, H * v.shape[-1])
     out = dense_proj(cfg, o, p["wo"])
     return out, {"k": k, "v": v}
@@ -395,53 +456,63 @@ def mla_forward(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
 
 
 def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    # one fused [latent | k_rope] cache per layer: decode reads it as both
+    # keys (full width) and values (first kv_lora_rank columns), so the hot
+    # path never concatenates or slices the cache
     return {
-        "latent": ParamSpec((batch, seq, cfg.kv_lora_rank),
-                            ("batch", "kv_seq", "lora"), "zeros"),
-        "k_rope": ParamSpec((batch, seq, cfg.qk_rope_dim),
-                            ("batch", "kv_seq", None), "zeros"),
+        "kv": ParamSpec((batch, seq, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                        ("batch", "kv_seq", None), "zeros"),
     }
 
 
 def mla_prefill(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
     out = mla_forward(cfg, p, x, positions, attn_chunk)
     latent, k_rope = _mla_latent(cfg, p, x, positions)
-    return out, {"latent": latent, "k_rope": k_rope}
+    return out, {"kv": jnp.concatenate([latent,
+                                        k_rope.astype(latent.dtype)], -1)}
 
 
-def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos):
+def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, start=None):
     """Weight-absorbed MLA decode: attention runs in the latent space, so the
     per-step cost is O(S * kv_lora_rank) instead of O(S * H * head_dim) —
     the cached latent is never re-expanded.  (This is the paper's data-reuse
-    insight applied to the KV cache.)"""
+    insight applied to the KV cache.)
+
+    The latent-space core is the flash-decode kernel in MQA form: queries
+    ``[q_absorbed | q_rope]`` against the fused ``[latent | k_rope]`` cache,
+    which is passed as *both* keys (full width, qk dim ``kvr +
+    qk_rope_dim``) and values (first ``kvr`` columns, selected by the
+    BlockSpec — no slicing copy).  ``start`` excludes left-pad cache rows,
+    exactly as in :func:`attn_decode`.
+    """
     dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
-    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])  # [B,1,H,dn],[B,1,H,dr]
-    latent_new, k_rope_new = _mla_latent(cfg, p, x, pos[:, None])
+    start = (jnp.zeros((B,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
+    rp = (pos - start)[:, None]  # logical position: pads carry no offset
+    q_nope, q_rope = _mla_q(cfg, p, x, rp)  # [B,1,H,dn],[B,1,H,dr]
+    latent_new, k_rope_new = _mla_latent(cfg, p, x, rp)
     bidx = jnp.arange(B)
     # out-of-capacity writes are dropped, never clamped onto the last row
     # (same invariant as attn_decode; the engine errors before this happens)
-    latent = cache["latent"].at[bidx, pos].set(
-        latent_new[:, 0].astype(cache["latent"].dtype), mode="drop")
-    k_rope = cache["k_rope"].at[bidx, pos].set(
-        k_rope_new[:, 0].astype(cache["k_rope"].dtype), mode="drop")
+    row = jnp.concatenate([latent_new, k_rope_new.astype(latent_new.dtype)],
+                          -1)[:, 0]
+    kv = cache["kv"].at[bidx, pos].set(row.astype(cache["kv"].dtype),
+                                       mode="drop")
     wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
     wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
-    s = jnp.einsum("bshr,btr->bhst", q_lat, latent, preferred_element_type=F32)
-    s = s + jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=F32)
-    s = s * ((dn + cfg.qk_rope_dim) ** -0.5)
-    S = latent.shape[1]
-    valid = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
-    s = jnp.where(valid, s, NEG_INF)
-    s = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhst,btr->bshr", s.astype(latent.dtype), latent)
+    q_cat = jnp.concatenate([q_lat, q_rope.astype(q_lat.dtype)], -1)
+    kv4 = kv[:, :, None]  # [B,S,1,kvr+dr]; same array as k AND v (dv slices)
+    o_lat = dispatch_attend_decode(
+        cfg, q_cat, kv4, kv4, pos, start, layout="linear",
+        scale=(dn + cfg.qk_rope_dim) ** -0.5, dv=kvr)  # [B,1,H,kvr]
     o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)  # expand to v space
     out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
-    return out, {"latent": latent, "k_rope": k_rope}
+    return out, {"kv": kv}
 
 
 # ---------------------------------------------------------------------------

@@ -186,8 +186,13 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
-                 img, mode: str, cache=None, pos=None, attn_chunk: int = 0):
-    """Returns (x, new_cache, aux)."""
+                 img, mode: str, cache=None, pos=None, start=None,
+                 attn_chunk: int = 0):
+    """Returns (x, new_cache, aux).  ``start``: per-slot left-pad offset
+    (serving prefill buckets); attention mixers exclude cache rows below it
+    and shift RoPE so real tokens sit at positions 0..len-1.  SSM mixers
+    scan pad tokens into their state — left-pad serving of SSM/hybrid archs
+    is not pollution-free (use exact-length buckets there)."""
     aux = jnp.zeros((), F32)
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
@@ -201,7 +206,8 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
             m = S.ssd_forward(cfg, p["mixer"], h)
     elif cfg.use_mla:
         if mode == "decode":
-            m, new_cache = L.mla_decode(cfg, p["mixer"], cache, h, pos)
+            m, new_cache = L.mla_decode(cfg, p["mixer"], cache, h, pos,
+                                        start=start)
         elif mode == "prefill":
             m, new_cache = L.mla_prefill(cfg, p["mixer"], h, positions, attn_chunk)
         else:
@@ -210,10 +216,10 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
         mp = p["mixer"]
         if mode == "decode":
             m, sc = L.attn_decode(cfg, mp["self"], {"k": cache["k"], "v": cache["v"]},
-                                  h, pos, local=False)
+                                  h, pos, local=False, start=start)
         elif mode == "prefill":
             m, sc = L.attn_prefill(cfg, mp["self"], h, positions, local=False,
-                                   attn_chunk=attn_chunk)
+                                   attn_chunk=attn_chunk, start=start)
         else:
             m = L.attn_forward(cfg, mp["self"], h, positions, local=False,
                                attn_chunk=attn_chunk)
@@ -227,10 +233,11 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
         m = mc  # residual added below
     else:
         if mode == "decode":
-            m, new_cache = L.attn_decode(cfg, p["mixer"], cache, h, pos, local=local)
+            m, new_cache = L.attn_decode(cfg, p["mixer"], cache, h, pos,
+                                         local=local, start=start)
         elif mode == "prefill":
             m, new_cache = L.attn_prefill(cfg, p["mixer"], h, positions, local=local,
-                                          attn_chunk=attn_chunk)
+                                          attn_chunk=attn_chunk, start=start)
         else:
             m = L.attn_forward(cfg, p["mixer"], h, positions, local=local,
                                attn_chunk=attn_chunk)
@@ -260,8 +267,8 @@ def _remat(cfg: ArchConfig, fn):
 
 
 def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
-                 mode: str, caches=None, pos=None, attn_chunk: int = 0,
-                 aux0=None):
+                 mode: str, caches=None, pos=None, start=None,
+                 attn_chunk: int = 0, aux0=None):
     """Scan `stage.repeats` iterations of the layer group."""
     group = stage.group
 
@@ -274,7 +281,8 @@ def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
             c_in = None if lc is None else lc[str(gi)]
             xc, nc, a = _apply_layer(cfg, spec, lp[str(gi)], xc,
                                      positions=positions, img=img, mode=mode,
-                                     cache=c_in, pos=pos, attn_chunk=attn_chunk)
+                                     cache=c_in, pos=pos, start=start,
+                                     attn_chunk=attn_chunk)
             if nc is not None:
                 new_caches[str(gi)] = nc
             aux = aux + a
@@ -342,9 +350,16 @@ def lm_logits(cfg: ArchConfig, params, hidden):
 # ---------------------------------------------------------------------------
 
 def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
-                   caches=None, pos=None, attn_chunk: int = 0,
+                   caches=None, pos=None, start=None, attn_chunk: int = 0,
                    main_repeats: int | None = None):
-    """Run the stack; returns (hidden, aux_loss, new_caches_per_stage)."""
+    """Run the stack; returns (hidden, aux_loss, new_caches_per_stage).
+
+    ``start`` (scalar or [B] int32) is the per-sequence left-pad offset from
+    the serving engine's prompt bucketing: prefill positions become
+    ``arange(S) - start`` (real tokens at 0..len-1, pad rows negative — the
+    attention masks exclude them), and decode validity/RoPE use it so the
+    outputs are invariant to the bucket size.
+    """
     x = embed_inputs(cfg, params, batch)
     x = constrain(x, ("batch", "seq", "embed"))
     img = project_images(cfg, params, batch)
@@ -353,14 +368,17 @@ def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
         positions = None
     else:
         positions = jnp.arange(seqlen, dtype=jnp.int32)
+        if start is not None:
+            st = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (x.shape[0],))
+            positions = positions[None, :] - st[:, None]  # [B, S] per-row
     aux = jnp.zeros((), F32)
     new_caches = []
     for si, stage in enumerate(cfg.stages(main_repeats)):
         c = None if caches is None else caches[si]
         x, aux, ys = _apply_stage(cfg, stage, params["stages"][si], x,
                                   positions=positions, img=img, mode=mode,
-                                  caches=c, pos=pos, attn_chunk=attn_chunk,
-                                  aux0=aux)
+                                  caches=c, pos=pos, start=start,
+                                  attn_chunk=attn_chunk, aux0=aux)
         new_caches.append(ys)
     x = L.apply_norm(cfg, params["final_norm"], x)
     return x, aux, (new_caches if mode in ("prefill", "decode") else None)
@@ -388,24 +406,28 @@ def loss_fn(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
     return loss, {"ce": ce, "aux": aux}
 
 
-def prefill(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
-            main_repeats: int | None = None):
-    """Returns (last-token logits, caches)."""
+def prefill(cfg: ArchConfig, params, batch: dict, *, start=None,
+            attn_chunk: int = 0, main_repeats: int | None = None):
+    """Returns (last-token logits, caches).  ``start``: left-pad offset per
+    sequence (see :func:`forward_hidden`) — pad rows are excluded from
+    attention and real tokens keep bucket-independent RoPE positions."""
     hidden, _, caches = forward_hidden(cfg, params, batch, mode="prefill",
-                                       attn_chunk=attn_chunk,
+                                       start=start, attn_chunk=attn_chunk,
                                        main_repeats=main_repeats)
     logits = lm_logits(cfg, params, hidden[:, -1:])
     return logits, caches
 
 
-def decode_step(cfg: ArchConfig, params, caches, token, pos, *,
+def decode_step(cfg: ArchConfig, params, caches, token, pos, *, start=None,
                 main_repeats: int | None = None):
     """One-token decode.  token: [B,1] int32; pos: scalar int32 (all slots in
     lock-step) or [B] int32 (slot-indexed — every sequence at its own offset,
-    as driven by the continuous-batching engine)."""
+    as driven by the continuous-batching engine).  ``start`` (scalar or [B])
+    is the left-pad offset: cache rows below it stay masked and the RoPE
+    position of the current token is ``pos - start``."""
     batch = {"tokens": token}
     hidden, _, new_caches = forward_hidden(cfg, params, batch, mode="decode",
-                                           caches=caches, pos=pos,
+                                           caches=caches, pos=pos, start=start,
                                            main_repeats=main_repeats)
     logits = lm_logits(cfg, params, hidden)
     return logits, new_caches

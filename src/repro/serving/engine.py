@@ -24,6 +24,7 @@ serving system.)
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
@@ -138,7 +139,13 @@ class Engine:
     max_len:        per-slot KV capacity; admission requires
                     ``bucketed_prompt + max_new <= max_len``
     prefill_bucket: prompts are left-padded to a multiple of this, bounding
-                    the number of prefill compilations
+                    the number of prefill compilations.  Pad rows are dead:
+                    the per-slot ``start`` offset excludes them from prefill
+                    attention and decode validity and shifts RoPE so real
+                    tokens sit at positions 0..len-1 — outputs are invariant
+                    to the bucket size.  (Exception: SSM/hybrid layers scan
+                    pad tokens into their recurrent state — use
+                    ``prefill_bucket=1`` there for exact-length prompts.)
     decode_chunk:   scan steps per compiled decode call (the scheduler syncs
                     with the host — evict/admit — once per chunk)
     eos_id:         optional stop token (checked inside the scan)
@@ -164,6 +171,13 @@ class Engine:
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.prefill_bucket = prefill_bucket
+        if prefill_bucket > 1 and any(sp.mixer == "ssm"
+                                      for sp in cfg.layer_specs()):
+            warnings.warn(
+                f"{cfg.name}: SSM layers scan left-pad tokens into their "
+                f"recurrent state, so outputs vary with prefill_bucket="
+                f"{prefill_bucket}; use prefill_bucket=1 for exact-length "
+                f"prompts", stacklevel=2)
         self.decode_chunk = decode_chunk
         self.eos_id = eos_id
         self.max_queue = max_queue
@@ -175,7 +189,8 @@ class Engine:
             self._cache_specs, is_leaf=is_spec)
         B = max_slots
         self._cur = np.zeros(B, np.int32)        # next input token per slot
-        self._pos = np.zeros(B, np.int32)        # its position
+        self._pos = np.zeros(B, np.int32)        # its cache row
+        self._start = np.zeros(B, np.int32)      # first live row (pad offset)
         self._remaining = np.zeros(B, np.int32)  # tokens still to emit
         self._temp = np.zeros(B, np.float32)
         self._keys = np.zeros((B, 2), np.uint32)
@@ -205,15 +220,19 @@ class Engine:
         keys = jax.vmap(lambda k: jax.random.split(k, 2)[1])(keys)
         return nxt, keys
 
-    def _decode_chunk(self, params, caches, cur, pos, remaining, temp, keys):
-        """``decode_chunk`` fused decode steps; emits [B, steps] tokens."""
+    def _decode_chunk(self, params, caches, cur, pos, start, remaining, temp,
+                      keys):
+        """``decode_chunk`` fused decode steps; emits [B, steps] tokens.
+        ``start`` holds each slot's left-pad offset (first live cache row) —
+        constant across the chunk — so decode attention never reads the pad
+        rows the prompt bucketing wrote."""
         cfg = self.cfg
 
         def body(carry, _):
             caches, cur, pos, remaining, keys = carry
             active = remaining > 0
             logits, caches = M.decode_step(cfg, params, caches, cur[:, None],
-                                           pos)
+                                           pos, start=start)
             nxt, keys = self._sample(logits[:, -1], temp, keys)
             nxt = jnp.where(active, nxt, cur)  # freeze finished slots
             step = active.astype(jnp.int32)
@@ -252,8 +271,9 @@ class Engine:
         if plen not in self._prefill_fns:
             cfg = self.cfg
 
-            def fn(params, caches, tokens, slot, temp1, key):
-                logits, small = M.prefill(cfg, params, {"tokens": tokens})
+            def fn(params, caches, tokens, slot, start, temp1, key):
+                logits, small = M.prefill(cfg, params, {"tokens": tokens},
+                                          start=start)
                 caches = self._write_slot(caches, small, slot)
                 t0, keys1 = self._sample(logits[:, -1], temp1[None],
                                          key[None])
@@ -307,19 +327,21 @@ class Engine:
                 continue
             req = self._queue.popleft()
             plen = self.padded_len(len(req.prompt))
+            start = plen - len(req.prompt)  # left-pad rows [0, start) are dead
             toks = np.zeros((1, plen), np.int32)
-            toks[0, plen - len(req.prompt):] = req.prompt  # left-pad
+            toks[0, start:] = req.prompt  # left-pad
             key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))
             t0 = time.time()
             self._caches, first, key1 = self._prefill_fn(plen)(
                 self.params, self._caches, jnp.asarray(toks), jnp.int32(i),
-                jnp.float32(req.temperature), key)
+                jnp.int32(start), jnp.float32(req.temperature), key)
             first = int(first)
             self.stats.prefill_s += time.time() - t0
             self.stats.prefills += 1
             now = time.time()
             self._slots[i] = _Slot(req, emitted=[first], first_token_s=now)
             self._cur[i], self._pos[i] = first, plen
+            self._start[i] = start
             self._remaining[i] = req.max_new - 1
             self._temp[i] = req.temperature
             self._keys[i] = np.asarray(key1)
@@ -363,8 +385,9 @@ class Engine:
             t0 = time.time()
             (self._caches, cur, pos, remaining, keys, toks) = self._decode_fn(
                 self.params, self._caches, jnp.asarray(self._cur),
-                jnp.asarray(self._pos), jnp.asarray(self._remaining),
-                jnp.asarray(self._temp), jnp.asarray(self._keys))
+                jnp.asarray(self._pos), jnp.asarray(self._start),
+                jnp.asarray(self._remaining), jnp.asarray(self._temp),
+                jnp.asarray(self._keys))
             toks = np.asarray(toks)
             self._cur, self._pos = np.array(cur), np.array(pos)
             self._remaining, self._keys = np.array(remaining), np.array(keys)

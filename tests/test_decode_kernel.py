@@ -1,0 +1,205 @@
+"""Flash-decode kernel validation: Pallas (interpret=True) vs the jnp oracle
+across cache layouts (linear/ring), GQA grouping, logit softcap, mismatched
+qk/v head dims (MLA latent decode), mixed per-slot positions and pad offsets,
+plus semantic tests that pin the oracle itself against full attention over
+the unrolled sequence (ring == sliding window; linear+start == left-pad
+exclusion) and the all-invalid-slot -> zeros contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.ops import attend_decode
+from repro.models.layers import attend
+
+RNG = np.random.RandomState(7)
+
+
+def _qkv(B, H, K, S, d, dv=None):
+    """Cache-native layout: k/v are [B, S, K, d] like the engine's slots."""
+    dv = dv or d
+    q = jnp.asarray(RNG.randn(B, H, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, K, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, K, dv) * 0.3, jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# kernel (interpret) vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,d,layout,softcap", [
+    (2, 4, 4, 128, 32, "linear", 0.0),
+    (3, 8, 2, 96, 32, "linear", 0.0),    # GQA 4:1, ragged S
+    (2, 4, 1, 128, 32, "linear", 30.0),  # MQA + softcap
+    (2, 4, 2, 64, 32, "ring", 0.0),      # sliding-window ring
+    (3, 6, 2, 50, 16, "ring", 20.0),     # ragged ring + softcap
+])
+def test_flash_decode_matches_oracle(B, H, K, S, d, layout, softcap):
+    q, k, v = _qkv(B, H, K, S, d)
+    pos = jnp.asarray(RNG.randint(0, 2 * S, size=B), jnp.int32) \
+        if layout == "ring" else jnp.asarray(RNG.randint(0, S, size=B))
+    start = jnp.asarray(RNG.randint(0, 8, size=B), jnp.int32)
+    want = ref.flash_decode_ref(q, k, v, pos, start, layout=layout,
+                                softcap=softcap)
+    got = flash_decode(q, k, v, pos, start, layout=layout, softcap=softcap,
+                       bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_flash_decode_mla_head_dims():
+    """qk dim != v dim (weight-absorbed MLA: q=[latent|rope], v=latent)."""
+    B, H, S, dqk, dv = 2, 8, 80, 48, 32
+    q, k, v = _qkv(B, H, 1, S, dqk, dv)
+    pos = jnp.asarray([11, 79], jnp.int32)
+    scale = 0.17  # explicit MLA scale (dn + dr)**-0.5, not dqk**-0.5
+    want = ref.flash_decode_ref(q, k, v, pos, None, scale=scale)
+    got = flash_decode(q, k, v, pos, None, scale=scale, bk=32, interpret=True)
+    assert got.shape == (B, H, dv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_flash_decode_fused_kv_operand():
+    """The MLA dual-operand form: ONE fused [latent | k_rope] cache passed
+    as both k and v, with ``dv`` narrowing the value read to the latent
+    columns — must equal passing the slices explicitly."""
+    B, H, S, kvr, dr = 2, 8, 72, 32, 16
+    q = jnp.asarray(RNG.randn(B, H, kvr + dr) * 0.3, jnp.float32)
+    kv = jnp.asarray(RNG.randn(B, S, 1, kvr + dr) * 0.3, jnp.float32)
+    pos = jnp.asarray([7, 65], jnp.int32)
+    start = jnp.asarray([3, 0], jnp.int32)
+    got = flash_decode(q, kv, kv, pos, start, scale=0.11, dv=kvr, bk=32,
+                       interpret=True)
+    want = flash_decode(q, kv, kv[..., :kvr], pos, start, scale=0.11, bk=32,
+                        interpret=True)
+    assert got.shape == (B, H, kvr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_flash_decode_mixed_slot_states():
+    """One batch, every slot in a different lifecycle state: fresh (pos ==
+    start), mid-sequence, at capacity, and fully empty (start > pos, the
+    recycled-slot case) — the empty slot must return exact zeros."""
+    B, H, K, S, d = 4, 4, 2, 64, 32
+    q, k, v = _qkv(B, H, K, S, d)
+    pos = jnp.asarray([5, 30, 63, 0], jnp.int32)
+    start = jnp.asarray([5, 2, 0, 10], jnp.int32)
+    got = flash_decode(q, k, v, pos, start, bk=32, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, pos, start)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+    assert np.all(np.asarray(got[3]) == 0.0)  # all-invalid -> exact zeros
+    # fresh slot attends exactly its single live row
+    G = H // K
+    want0 = np.asarray(v[0, 5])  # [K, d]
+    np.testing.assert_allclose(np.asarray(got[0]).reshape(K, G, d),
+                               np.broadcast_to(want0[:, None], (K, G, d)),
+                               atol=2e-6)
+
+
+def test_flash_decode_empty_slot_zero_ring():
+    B, H, K, S, d = 2, 4, 2, 32, 16
+    q, k, v = _qkv(B, H, K, S, d)
+    pos = jnp.asarray([40, 3], jnp.int32)
+    start = jnp.asarray([60, 0], jnp.int32)  # slot 0: start > pos -> empty
+    got = flash_decode(q, k, v, pos, start, layout="ring", bk=16,
+                       interpret=True)
+    assert np.all(np.asarray(got[0]) == 0.0)
+    want = ref.flash_decode_ref(q, k, v, pos, start, layout="ring")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_dtypes(dtype):
+    B, H, K, S, d = 2, 4, 2, 64, 32
+    q = jnp.asarray(RNG.randn(B, H, d) * 0.3, dtype)
+    k = jnp.asarray(RNG.randn(B, S, K, d) * 0.3, dtype)
+    v = jnp.asarray(RNG.randn(B, S, K, d) * 0.3, dtype)
+    pos = jnp.asarray([10, 50], jnp.int32)
+    got = flash_decode(q, k, v, pos, None, bk=32, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, pos, None)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# oracle semantics vs full attention over the unrolled sequence
+# ---------------------------------------------------------------------------
+
+def _simulate_cache(keys, vals, pos, S, layout):
+    """Write keys/vals[0..pos] into a [S] cache the way the decode path does
+    (linear at row t, ring at row t % S); cache-native [1, S, K, d]."""
+    K = keys.shape[1]
+    k_c = np.zeros((1, S, K, keys.shape[-1]), np.float32)
+    v_c = np.zeros((1, S, K, vals.shape[-1]), np.float32)
+    for t in range(pos + 1):
+        row = t % S if layout == "ring" else t
+        k_c[0, row] = keys[t]
+        v_c[0, row] = vals[t]
+    return jnp.asarray(k_c), jnp.asarray(v_c)
+
+
+@pytest.mark.parametrize("layout,S,pos,start", [
+    ("linear", 64, 40, 0), ("linear", 64, 40, 7),  # left-pad exclusion
+    ("ring", 32, 20, 0), ("ring", 32, 50, 0),      # before / after wrap
+    ("ring", 32, 50, 30),                          # pads still inside window
+])
+def test_decode_oracle_matches_unrolled_attend(layout, S, pos, start):
+    """flash_decode over a simulated slot cache == `attend` (the model's jnp
+    core) over the unrolled live sequence: causal single query at the end,
+    window = ring size for the ring layout, pad rows dropped via start."""
+    H, K, d = 4, 2, 16
+    L = pos + 1
+    keys = RNG.randn(L, K, d).astype(np.float32) * 0.3
+    vals = RNG.randn(L, K, d).astype(np.float32) * 0.3
+    q = jnp.asarray(RNG.randn(1, H, d) * 0.3, jnp.float32)
+    k_c, v_c = _simulate_cache(keys, vals, pos, S, layout)
+    got = flash_decode(q, k_c, v_c, jnp.int32(pos), jnp.int32(start),
+                       layout=layout, bk=16, interpret=True)
+    # oracle: attend over rows [start, pos] (with the ring keeping only the
+    # last S of them), query at position pos
+    lo = start if layout == "linear" else max(start, pos + 1 - S)
+    kk = jnp.asarray(keys[lo:])[None]  # [1, T, K, d]
+    vv = jnp.asarray(vals[lo:])[None]
+    qq = q[:, None]  # [1, 1, H, d]
+    p_q = jnp.asarray([pos])
+    p_k = jnp.arange(lo, pos + 1)
+    want = attend(qq, kk, vv, p_q, p_k, causal=True)  # [1, 1, H, d]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, 0]),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch + property sweep
+# ---------------------------------------------------------------------------
+
+def test_attend_decode_mode_dispatch():
+    B, H, K, S, d = 2, 4, 2, 48, 16
+    q, k, v = _qkv(B, H, K, S, d)
+    pos = jnp.asarray([9, 33], jnp.int32)
+    start = jnp.asarray([2, 0], jnp.int32)
+    a = attend_decode(q, k, v, pos, start, mode="reference")
+    b = attend_decode(q, k, v, pos, start, mode="interpret", bk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-6, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 33, 64]), p=st.integers(0, 80),
+       st_=st.integers(0, 12))
+def test_prop_flash_decode_any_state(s, p, st_):
+    q, k, v = _qkv(2, 4, 2, s, 16)
+    pos = jnp.asarray([p % s, p], jnp.int32)
+    start = jnp.asarray([st_, st_ // 2], jnp.int32)
+    for layout in ("linear", "ring"):
+        got = flash_decode(q, k, v, pos, start, layout=layout, bk=16,
+                           interpret=True)
+        want = ref.flash_decode_ref(q, k, v, pos, start, layout=layout)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-6, rtol=1e-5, err_msg=layout)

@@ -74,6 +74,54 @@ def test_interpret_gemma_window_softcap():
                                np.asarray(h_ref, np.float32), atol=1e-3)
 
 
+def test_interpret_decode_matches_reference(edge):
+    """Decode hot path obeys kernel_mode: interpret-mode ``decode_step``
+    (flash-decode Pallas kernel through the interpreter) matches the jnp
+    reference to <= 1e-4 logits on the edge config, stepping from the same
+    caches — including a left-padded prefill (live rows only)."""
+    cfg, params, batch = edge
+    from repro.serving.engine import grow_cache
+    toks = batch["tokens"]
+    start = jnp.int32(5)  # left-pad: rows [0, 5) are dead
+    padded = jnp.concatenate(
+        [jnp.zeros((1, 5), toks.dtype), toks[:, : -6]], axis=1)
+    plen = padded.shape[1]
+    _, caches = M.prefill(cfg, params, {"tokens": padded}, start=start)
+    caches = grow_cache(cfg, caches, plen + 5)
+    cfg_i = cfg.with_(kernel_mode="interpret")
+    for step in range(3):
+        lg_ref, caches_ref = M.decode_step(
+            cfg, params, caches, toks[:, -6 + step: -5 + step],
+            jnp.int32(plen + step), start=start)
+        lg_i, caches_i = M.decode_step(
+            cfg_i, params, caches, toks[:, -6 + step: -5 + step],
+            jnp.int32(plen + step), start=start)
+        np.testing.assert_allclose(np.asarray(lg_i), np.asarray(lg_ref),
+                                   atol=ATOL, err_msg=f"step {step}")
+        caches = caches_ref
+    for a, b in zip(jax.tree.leaves(caches_ref), jax.tree.leaves(caches_i)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+def test_interpret_decode_matches_reference_mla():
+    """Same decode parity through the weight-absorbed MLA path (latent-space
+    flash decode with mismatched qk/v dims)."""
+    cfg = reduce_config(get_config("minicpm3-4b"))
+    assert cfg.use_mla
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    from repro.serving.engine import grow_cache
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 24), 0,
+                              cfg.vocab_size)
+    _, caches = M.prefill(cfg, params, {"tokens": toks[:, :-1]})
+    caches = grow_cache(cfg, caches, 24)
+    lg_ref, _ = M.decode_step(cfg, params, caches, toks[:, -1:],
+                              jnp.int32(23))
+    lg_i, _ = M.decode_step(cfg.with_(kernel_mode="interpret"), params,
+                            caches, toks[:, -1:], jnp.int32(23))
+    np.testing.assert_allclose(np.asarray(lg_i, np.float32),
+                               np.asarray(lg_ref, np.float32), atol=1e-2)
+
+
 def test_quantize_params_structure(edge):
     cfg, params, _ = edge
     qp = M.quantize_params(cfg, params)

@@ -192,6 +192,67 @@ def test_attention_matches_attend(S, H, K, window, softcap):
                                atol=2e-3, rtol=1e-2)
 
 
+@pytest.mark.parametrize("Sq,chunk", [(52, 16), (64, 24), (100, 32), (33, 32)])
+def test_attend_chunked_ragged_matches_unchunked(Sq, chunk):
+    """Query chunking must honor ``attn_chunk`` even when Sq % chunk != 0
+    (the old path silently fell back to unchunked): the tail chunk is padded
+    and sliced, numerically identical to the unchunked oracle."""
+    H, K, d = 4, 2, 16
+    q = jnp.asarray(RNG.randn(2, Sq, H, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(2, Sq, K, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(2, Sq, K, d) * 0.3, jnp.float32)
+    pos = jnp.arange(Sq)
+    want = attend(q, k, v, pos, pos, causal=True, window=24)
+    got = attend(q, k, v, pos, pos, causal=True, window=24, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("chunk", [0, 16, 24])
+def test_attend_per_row_positions(chunk):
+    """[B, Sq] per-row positions (continuous-batching left-pad offsets) work
+    in both the unchunked and chunked paths (the old chunked path crashed
+    reshaping [B, Sq] as [Sq]), and negative (pad) key positions are masked:
+    each row must match a solo run of its unpadded tail."""
+    B, S, H, K, d = 2, 48, 4, 2, 16
+    starts = [0, 13]
+    q = jnp.asarray(RNG.randn(B, S, H, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, K, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, K, d) * 0.3, jnp.float32)
+    pos = jnp.stack([jnp.arange(S) - s for s in starts])  # [B, S]
+    got = attend(q, k, v, pos, pos, causal=True, chunk=chunk)
+    for b, s in enumerate(starts):
+        solo = attend(q[b:b + 1, s:], k[b:b + 1, s:], v[b:b + 1, s:],
+                      jnp.arange(S - s), jnp.arange(S - s), causal=True)
+        np.testing.assert_allclose(np.asarray(got[b:b + 1, s:]),
+                                   np.asarray(solo), atol=1e-5, rtol=1e-5,
+                                   err_msg=f"b={b} chunk={chunk}")
+        # pad query rows attend nothing -> exact zeros (flash contract)
+        assert np.all(np.asarray(got[b, :s]) == 0.0)
+
+
+def test_flash_attention_start_excludes_leftpad():
+    """Per-batch ``start``: keys below it never receive weight, matching the
+    oracle's mask — the prefill half of the left-pad pollution fix."""
+    B, H, S, d = 2, 4, 96, 32
+    q = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
+    start = jnp.asarray([17, 0], jnp.int32)
+    got = flash_attention(q, k, v, causal=True, start=start, bq=32, bk=32,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, start=start)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=1e-2)
+    # row 0's queries before start see no keys -> zeros
+    assert np.all(np.asarray(got[0, :, :17]) == 0.0)
+    # and the live region equals a solo run of the unpadded sequence
+    solo = flash_attention(q[:1, :, 17:], k[:1, :, 17:], v[:1, :, 17:],
+                           causal=True, bq=32, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0, :, 17:]), np.asarray(solo[0]),
+                               atol=2e-3, rtol=1e-2)
+
+
 def test_w8a8_within_quant_error_of_fp32():
     """cgra_gemm_w8a8 (interpret) vs the fp32 GEMM: median relative error
     bounded by int8 quantization noise."""

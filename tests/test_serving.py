@@ -32,17 +32,21 @@ def _prompts(cfg, texts):
 
 def reference_greedy(cfg, params, prompt, plen, max_new):
     """Seed-style unbatched path: single prefill + per-token Python loop over
-    ``decode_step`` with a grow_cache'd linear cache."""
+    ``decode_step`` with a grow_cache'd linear cache.  Passes the left-pad
+    ``start`` offset like the engine, so pad rows stay dead on both paths."""
+    start = plen - len(prompt)
     toks = np.zeros((1, plen), np.int32)
-    toks[0, plen - len(prompt):] = prompt
-    logits, caches = M.prefill(cfg, params, {"tokens": jnp.asarray(toks)})
+    toks[0, start:] = prompt
+    logits, caches = M.prefill(cfg, params, {"tokens": jnp.asarray(toks)},
+                               start=jnp.int32(start))
     caches = grow_cache(cfg, caches, plen + max_new)
     cur = int(jnp.argmax(logits[0, -1, : cfg.vocab_size]))
     out = [cur]
     for step in range(max_new - 1):
         logits, caches = M.decode_step(cfg, params, caches,
                                        jnp.asarray([[cur]], jnp.int32),
-                                       jnp.int32(plen + step))
+                                       jnp.int32(plen + step),
+                                       start=jnp.int32(start))
         cur = int(jnp.argmax(logits[0, -1, : cfg.vocab_size]))
         out.append(cur)
     return out
@@ -201,6 +205,52 @@ def test_engine_w8a8_serves_full_budget(olmo):
     for p, seq in zip(prompts, out):
         assert len(seq) == len(p) + 6
         assert all(0 <= t < cfg.vocab_size for t in seq)
+
+
+def test_outputs_invariant_to_prefill_bucket(olmo):
+    """Left-pad KV pollution regression: the bucket pad rows must be fully
+    dead (masked in prefill attention, excluded from decode validity, RoPE
+    offset by ``start``), so a request's greedy output is bit-identical
+    whether its prompt is padded to its own length, 32 or 64 rows."""
+    cfg, params = olmo
+    prompt = _prompts(cfg, ["the target request"])[0]  # len 18: ragged
+    outs = []
+    for bucket in (len(prompt), 32, 64):
+        eng = Engine(cfg, params, max_len=128, max_slots=2,
+                     prefill_bucket=bucket, decode_chunk=4)
+        out, _ = eng.generate([prompt], max_new=8)
+        outs.append(out[0][len(prompt):])
+    assert outs[0] == outs[1] == outs[2], outs
+
+
+def test_ring_outputs_invariant_to_prefill_bucket(gemma):
+    """Same invariance through sliding-window ring caches (pad rows can
+    survive the prefill ring roll when the prompt is shorter than the
+    window — decode validity must drop them by absolute row)."""
+    cfg, params = gemma
+    prompt = _prompts(cfg, ["ring pads"])[0]
+    outs = []
+    for bucket in (16, 48):
+        eng = Engine(cfg, params, max_len=128, max_slots=2,
+                     prefill_bucket=bucket, decode_chunk=4)
+        out, _ = eng.generate([prompt], max_new=6)
+        outs.append(out[0][len(prompt):])
+    assert outs[0] == outs[1], outs
+
+
+def test_engine_interpret_decode_matches_reference(olmo):
+    """The decode hot path obeys kernel_mode: the interpret engine (flash
+    decode through the Pallas interpreter) reproduces the reference engine
+    token for token, including recycled slots with distinct pad offsets."""
+    cfg, params = olmo
+    prompts = _prompts(cfg, ["kernel", "decode path", "third one longer"])
+    outs = []
+    for mode in (None, "interpret"):
+        eng = Engine(cfg, params, max_len=96, max_slots=2, prefill_bucket=16,
+                     decode_chunk=4, kernel_mode=mode)
+        out, _ = eng.generate(prompts, max_new=6)
+        outs.append(out)
+    assert outs[0] == outs[1]
 
 
 def test_engine_kernel_mode_override(olmo):
