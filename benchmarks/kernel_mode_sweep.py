@@ -48,12 +48,10 @@ def _decode_steady_state_fn(cfg, params, slots: int, seq: int, steps: int):
     initial caches, tokens/s divisor)."""
     from jax import lax
 
-    from repro.serving.engine import grow_cache
-
     toks = jax.random.randint(jax.random.PRNGKey(2), (slots, seq), 0,
                               cfg.vocab_size)
-    _, caches = M.prefill(cfg, params, {"tokens": toks})
-    caches = grow_cache(cfg, caches, seq + steps)
+    _, caches = M.prefill(cfg, params, {"tokens": toks},
+                          cache_len=seq + steps)
     pos0 = jnp.full((slots,), seq, jnp.int32)
     cur0 = toks[:, -1]
 

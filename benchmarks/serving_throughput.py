@@ -1,19 +1,25 @@
-"""E7: serving throughput — continuous-batching scan engine vs the seed
-per-token Python loop.
+"""E7: serving throughput — paged continuous-batching engine vs the seed
+per-token Python loop, plus the paged cache's headline capacity win.
 
-Workload: a mixed-prompt-length batch of requests under a Poisson arrival
-process (streamed into the engine as slots free up), plus a closed all-at-once
-batch for the head-to-head tokens/s comparison against the seed-style loop
-(one fixed batch, Python `for` over decode steps, `grow_cache` padding).
+Workloads:
+- closed batch: same requests all present at t=0, head-to-head tokens/s vs
+  the seed-style loop (one fixed batch, Python `for` over decode steps)
+- streaming: Poisson arrivals through a small engine (p50/p99 latency)
+- prefix reuse: N requests sharing a long common prompt prefix, served at a
+  *fixed KV memory budget* — radix page sharing vs no sharing.  Reported:
+  prefix-cache hit rate and the max concurrent sequences each mode reaches
+  (the paged+radix engine fits the whole batch where slot-equivalent
+  allocation fits a fraction).
 
-Reported: tokens/s for both paths, speedup, and p50/p99 request latency under
-the streaming workload.
+``--json PATH`` additionally dumps the headline numbers (tokens/s, prefix
+hit rate, concurrency at fixed memory) for CI to persist.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--arch olmo-1b]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -23,8 +29,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
 from repro.models import model as M
-from repro.serving.engine import (Engine, ServeStats, bytes_tokenizer_encode,
-                                  grow_cache)
+from repro.serving import (Engine, EngineConfig, ServeStats,
+                           bytes_tokenizer_encode)
 
 MAX_NEW = 32
 N_REQUESTS = 8
@@ -38,19 +44,19 @@ def make_workload(cfg, n=N_REQUESTS, seed=0):
 
 
 def seed_generate(cfg, params, prompts, max_new=MAX_NEW):
-    """The seed engine's decode path: one fixed batch, prefill, grow_cache,
-    then a Python loop dispatching one compiled step per token."""
-    dec = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
-    pre = jax.jit(lambda p, b: M.prefill(cfg, p, b))
-    B = len(prompts)
+    """The seed engine's decode path: one fixed batch, prefill padded to the
+    longest prompt, then a Python loop dispatching one compiled step per
+    token (cache capacity pre-padded via ``prefill(cache_len=...)``)."""
     plen = max(len(p) for p in prompts)
+    dec = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+    pre = jax.jit(lambda p, b: M.prefill(cfg, p, b, cache_len=plen + max_new))
+    B = len(prompts)
     toks = np.zeros((B, plen), np.int32)
     for i, p in enumerate(prompts):
         toks[i, plen - len(p):] = p
     stats = ServeStats()
     t0 = time.time()
     logits, caches = pre(params, {"tokens": jnp.asarray(toks)})
-    caches = grow_cache(cfg, caches, plen + max_new)
     jax.block_until_ready(caches)
     stats.prefill_s = time.time() - t0
     out = [list(p) for p in prompts]
@@ -76,8 +82,9 @@ def bench_closed_batch(cfg, params, prompts):
     _, seed_stats = seed_generate(cfg, params, prompts)
     seed_wall = time.time() - t0
 
-    eng = Engine(cfg, params, max_len=256, max_slots=len(prompts),
-                 prefill_bucket=32, decode_chunk=8)
+    eng = Engine(cfg, params, EngineConfig(max_len=256,
+                                           max_batch=len(prompts),
+                                           decode_chunk=8))
     eng.generate(prompts, max_new=MAX_NEW)  # warm (compile)
     t0 = time.time()
     _, cb_stats = eng.generate(prompts, max_new=MAX_NEW)  # per-call deltas
@@ -86,10 +93,10 @@ def bench_closed_batch(cfg, params, prompts):
 
 
 def bench_streaming(cfg, params, prompts, rate=4.0):
-    """Poisson arrivals at `rate` req/s through a 4-slot engine."""
+    """Poisson arrivals at `rate` req/s through a 4-row engine."""
     rng = np.random.RandomState(1)
-    eng = Engine(cfg, params, max_len=256, max_slots=4, prefill_bucket=32,
-                 decode_chunk=8)
+    eng = Engine(cfg, params, EngineConfig(max_len=256, max_batch=4,
+                                           decode_chunk=8))
     eng.generate(prompts[:4], max_new=4)  # warm compiles
     due = np.cumsum(rng.exponential(1.0 / rate, len(prompts)))
     t0, nxt, results = time.time(), 0, []
@@ -111,7 +118,36 @@ def bench_streaming(cfg, params, prompts, rate=4.0):
                 ttft_p50=ttft[len(ttft) // 2])
 
 
-def run(arch: str = "olmo-1b") -> list[str]:
+def bench_prefix_reuse(cfg, params, n_req=8, prefix_len=512, suffix_len=8,
+                       max_new=8, page_size=64):
+    """N requests sharing a ``prefix_len``-token prompt prefix, at a fixed
+    page-pool budget sized so sharing is the difference between fitting the
+    whole batch and fitting a fraction of it."""
+    rng = np.random.RandomState(2)
+    prefix = rng.randint(1, cfg.vocab_size, prefix_len).tolist()
+    prompts = [prefix + rng.randint(1, cfg.vocab_size, suffix_len).tolist()
+               for _ in range(n_req)]
+    rows = prefix_len + suffix_len + max_new
+    pages_per_req = -(-rows // page_size)
+    # budget: the shared prefix once + one private tail page per request
+    n_pages = 1 + (prefix_len // page_size) + n_req * (
+        pages_per_req - prefix_len // page_size)
+    max_len = -(-rows // page_size) * page_size
+    out = {}
+    for label, use_prefix in (("radix", True), ("no_share", False)):
+        eng = Engine(cfg, params, EngineConfig(
+            max_len=max_len, max_batch=n_req, page_size=page_size,
+            n_pages=n_pages, prefix_cache=use_prefix, decode_chunk=8))
+        t0 = time.time()
+        eng.generate(prompts, max_new=max_new)
+        out[label] = dict(wall=time.time() - t0,
+                          max_concurrent=eng.stats.peak_active,
+                          hit_rate=eng.prefix_hit_rate)
+    out["kv_rows_budget"] = (n_pages - 1) * page_size
+    return out
+
+
+def run(arch: str = "olmo-1b") -> tuple[list[str], dict]:
     cfg = reduce_config(get_config(arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
     prompts = make_workload(cfg)
@@ -128,21 +164,48 @@ def run(arch: str = "olmo-1b") -> list[str]:
                f"{n_tok / cb_wall:.1f},{cb_wall:.2f}")
     speedup = seed_wall / cb_wall
     out.append(f"derived: scan-based continuous batching is {speedup:.2f}x the "
-               f"seed loop end-to-end (per-step Python dispatch + grow_cache "
-               f"padding eliminated)")
+               f"seed loop end-to-end (per-step Python dispatch and cache "
+               f"re-padding eliminated)")
 
     s = bench_streaming(cfg, params, prompts)
-    out.append("streaming (Poisson 4 req/s, 4 slots): "
+    out.append("streaming (Poisson 4 req/s, 4 batch rows): "
                f"{s['tput']:.1f} tok/s p50={s['p50']:.2f}s p99={s['p99']:.2f}s "
                f"ttft_p50={s['ttft_p50']:.2f}s")
-    return out
+
+    pr = bench_prefix_reuse(cfg, params)
+    out.append(f"prefix reuse (8 reqs sharing a 512-token prefix, "
+               f"{pr['kv_rows_budget']} KV rows total): "
+               f"radix max_concurrent={pr['radix']['max_concurrent']} "
+               f"hit_rate={pr['radix']['hit_rate']:.2f} | no_share "
+               f"max_concurrent={pr['no_share']['max_concurrent']}")
+
+    blob = dict(
+        arch=cfg.name,
+        decode_tokens_per_s=round(cb_stats.tokens_per_s, 2),
+        seed_decode_tokens_per_s=round(seed_stats.tokens_per_s, 2),
+        end_to_end_speedup=round(speedup, 3),
+        streaming_p50_s=round(s["p50"], 3),
+        streaming_p99_s=round(s["p99"], 3),
+        prefix_hit_rate=round(pr["radix"]["hit_rate"], 4),
+        max_concurrent_radix=pr["radix"]["max_concurrent"],
+        max_concurrent_no_share=pr["no_share"]["max_concurrent"],
+        kv_rows_budget=pr["kv_rows_budget"],
+    )
+    return out, blob
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--json", default=None,
+                    help="also dump headline numbers to this JSON path")
     args = ap.parse_args()
-    print("\n".join(run(args.arch)))
+    lines, blob = run(args.arch)
+    print("\n".join(lines))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """End-to-end serving example: requests stream through the continuous-batching
-engine — each is prefilled into a free KV-cache slot, decodes inside the
-scanned multi-token loop, and frees its slot for the next arrival.
+engine — each is prefilled into pages of the shared KV pool, decodes inside
+the scanned multi-token loop, and releases its pages for the next arrival
+(common prompt prefixes share pages via the radix cache).
 
     PYTHONPATH=src python examples/serve.py --arch gemma3-4b --max-new 24
 """
@@ -10,8 +11,8 @@ import jax
 
 from repro.configs import get_config, reduce_config
 from repro.models import model as M
-from repro.serving.engine import (Engine, bytes_tokenizer_decode,
-                                  bytes_tokenizer_encode)
+from repro.serving import (Engine, EngineConfig, bytes_tokenizer_decode,
+                           bytes_tokenizer_encode)
 
 REQUESTS = [
     "the paper proposes a 4x4 PE array",
@@ -26,7 +27,8 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="max concurrent sequences (decode batch)")
     ap.add_argument("--kernel-mode", default=None,
                     choices=["reference", "interpret", "pallas"])
     ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
@@ -35,9 +37,10 @@ def main():
 
     cfg = reduce_config(get_config(args.arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
-    # 2 slots for 4 requests: watch the engine recycle slots mid-flight
-    eng = Engine(cfg, params, max_len=256, max_slots=args.slots,
-                 kernel_mode=args.kernel_mode, quant=args.quant)
+    # batch of 2 for 4 requests: watch the engine recycle pages mid-flight
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=256, max_batch=args.batch,
+        kernel_mode=args.kernel_mode, quant=args.quant))
 
     for i, req in enumerate(REQUESTS):
         eng.submit(bytes_tokenizer_encode(req, cfg.vocab_size),
@@ -46,9 +49,10 @@ def main():
 
     stats = eng.stats
     print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
-          f"quant={eng.cfg.quant} requests={len(REQUESTS)} slots={args.slots} "
+          f"quant={eng.cfg.quant} requests={len(REQUESTS)} batch={args.batch} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
-          f"({stats.tokens_per_s:.1f} tok/s)")
+          f"({stats.tokens_per_s:.1f} tok/s, "
+          f"prefix_hit={eng.prefix_hit_rate:.0%})")
     for rid, req in enumerate(REQUESTS):
         gen = bytes_tokenizer_decode(results[rid].generated)
         print(f"  [{req[:40]:40s}] -> {gen!r}")

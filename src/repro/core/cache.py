@@ -1,0 +1,29 @@
+"""Cache-layout vocabulary shared by the kernels, layers and serving engine.
+
+``CacheLayout`` replaces the loose ``"linear"``/``"ring"`` strings that the
+decode kernels grew across PRs 1-3.  It subclasses ``str`` so every existing
+comparison (``layout == "linear"``) and every caller passing a plain string
+keeps working; new code should pass the enum members.
+
+- ``LINEAR`` — global-attention cache: rows ``[start, pos]`` are live, row
+  ``pos`` holds the current token.
+- ``RING``   — sliding-window cache of size S: entry ``j`` holds absolute row
+  ``pos - ((pos - j) mod S)``.
+- ``PAGED``  — block-table cache: logical rows ``[start, pos]`` live, mapped
+  through a per-sequence page table onto a shared page pool (the serving
+  engine's layout; the kernels see it as LINEAR plus a page indirection).
+- ``STATE``  — constant-size recurrent state (SSM); no row indexing at all.
+"""
+from __future__ import annotations
+
+from enum import Enum
+
+
+class CacheLayout(str, Enum):
+    LINEAR = "linear"
+    RING = "ring"
+    PAGED = "paged"
+    STATE = "state"
+
+    def __str__(self) -> str:  # f"{layout}" -> "linear", not "CacheLayout..."
+        return self.value

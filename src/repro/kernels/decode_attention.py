@@ -8,10 +8,11 @@ once.  This kernel is the decode-side counterpart of ``flash_attention``:
 - the KV cache is streamed in ``bk``-row blocks (the MOB prefetch pipeline),
   with a running max/denominator online-softmax accumulator in VMEM so the
   [H, S] score matrix never materializes (C4 data reuse);
-- per-slot ``pos`` (tokens decoded so far) and ``start`` (left-pad offset)
-  scalars ride in via scalar prefetch and drive in-kernel validity, so dead
-  cache rows — the slot's unwritten tail *and* the engine's left-pad rows —
-  never receive weight;
+- per-slot ``pos`` (tokens decoded so far) and ``start`` (validity lower
+  bound: 0, or ``pos - window + 1`` for sliding-window layers on a linear
+  cache) scalars ride in via scalar prefetch and drive in-kernel validity,
+  so dead cache rows — the slot's unwritten tail and anything below
+  ``start`` — never receive weight;
 - for the linear (global-attention) layout, k-blocks entirely outside the
   live ``[start, pos]`` range are skipped outright: their compute is gated
   by ``pl.when`` and their BlockSpec index remaps to a live block (repeat
@@ -27,6 +28,15 @@ once.  This kernel is the decode-side counterpart of ``flash_attention``:
 
 A fully-invalid slot (``start > pos``, e.g. a drained engine slot) returns
 exact zeros, mirroring the masked-row contract of ``flash_attention``.
+
+Paged mode (``pages=``): k/v are *page pools* ``[n_pages, page_size, K, d]``
+shared by every sequence, and a scalar-prefetched per-sequence page table
+``[B, npp]`` rides alongside ``pos``/``start``.  One k-block is one page and
+the BlockSpec index map follows the table — logical block ``ik`` of slot
+``b`` streams page ``pages[b, ik]`` from the pool — so the kernel body is
+bit-for-bit the linear layout over logical rows; the indirection lives
+entirely in the index map, and the same dead-block clipping bounds HBM
+traffic by the live length.
 """
 from __future__ import annotations
 
@@ -50,7 +60,7 @@ def _fd_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
 
     ``S`` is the unpadded cache capacity; rows ``>= S`` are grid padding.
     ``pos_ref``/``start_ref`` are the scalar-prefetched per-slot validity
-    bounds (cache row of the current token / first non-pad row).
+    bounds (cache row of the current token / first live row).
     """
     b = pl.program_id(0)
     ik = pl.program_id(2)
@@ -109,23 +119,107 @@ def _fd_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
+def _fd_kernel_paged(pos_ref, start_ref, pages_ref, *args, **kw):
+    """Paged entry: the page table is consumed by the BlockSpec index map
+    only — the kernel body works in logical rows and never sees it."""
+    del pages_ref
+    _fd_kernel(pos_ref, start_ref, *args, **kw)
+
+
+def _flash_decode_paged(q, k, v, pos, start, pages, *, softcap: float,
+                        scale, dv: int | None, interpret: bool):
+    """q: [B, H, dq]; k/v: page pools [P, ps, K, d]; pages: [B, npp] int32
+    -> [B, H, dv].  Logical row ``r`` of slot ``b`` lives at pool row
+    ``(pages[b, r // ps], r % ps)``; validity is the linear rule over
+    logical rows ``[start, pos]``.  ``ps`` must be a multiple of 8
+    (sublane alignment — enforced by ``EngineConfig``)."""
+    B, H, dq = q.shape
+    ps, K = k.shape[1], k.shape[2]
+    npp = pages.shape[1]
+    dv = dv or v.shape[-1]
+    G = H // K
+    scale = scale if scale is not None else dq ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    start = (jnp.zeros((B,), jnp.int32) if start is None
+             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
+    pages = jnp.asarray(pages, jnp.int32)
+    shared = v is k  # MLA dual-operand form
+    if k.dtype != q.dtype:
+        k = k.astype(q.dtype)
+    if shared:
+        v = k
+    elif v.dtype != q.dtype:
+        v = v.astype(q.dtype)
+
+    Gp = round_up(G, 8)
+    qg = q.reshape(B, K, G, dq)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    grid = (B, K, npp)
+
+    def kv_map(b, kh, ik, pos_ref, start_ref, pages_ref):
+        # dead logical blocks revisit a live page (repeat index -> the DMA
+        # is elided), exactly like the dense linear layout's clipping
+        lo = jnp.minimum(start_ref[b] // ps, npp - 1)
+        hi = jnp.minimum(pos_ref[b] // ps, npp - 1)
+        ik = jnp.clip(ik, lo, hi)
+        return (pages_ref[b, ik], 0, kh, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # pos, start, pages
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, dq), lambda b, kh, ik, *_: (b, kh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dq), kv_map),
+            pl.BlockSpec((1, ps, 1, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, dv),
+                               lambda b, kh, ik, *_: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), F32),
+            pltpu.VMEM((Gp, 1), F32),
+            pltpu.VMEM((Gp, dv), F32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fd_kernel_paged, nk=npp, bk=ps, S=npp * ps,
+                          layout="linear", softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Gp, dv), q.dtype),
+        interpret=interpret,
+    )(pos, start, pages, qg, k, v)
+    return out[:, :, :G].reshape(B, H, dv)
+
+
 def flash_decode(q, k, v, pos, start=None, *, layout: str = "linear",
                  softcap: float = 0.0, scale=None, bk: int = 128,
-                 dv: int | None = None, interpret: bool = False):
+                 dv: int | None = None, pages=None, interpret: bool = False):
     """q: [B, H, dq]; k: [B, S, K, dq]; v: [B, S, K, >=dv] -> [B, H, dv].
 
     k/v arrive in the engine's *native* slot-cache layout ``[B, S, K, d]``
     (seq-major) — the kernel blocks the S axis directly, so the hot path
     never transposes or copies the cache.  ``pos``/``start``: [B] int32
     per-slot validity bounds (broadcastable scalars accepted; ``start=None``
-    means no left-pad rows).  ``layout`` selects the cache validity rule:
+    means every row from 0 is live).  ``layout`` selects the validity rule:
     ``"linear"`` (global attention, rows ``[start, pos]`` live) or ``"ring"``
     (sliding window of size S, entry ``pos % S`` holding the current token).
     H % K == 0 (GQA).  ``dv`` narrows the value read to the first ``dv``
     columns of ``v`` via the BlockSpec (no slicing copy): MLA passes its
     concatenated ``[latent | k_rope]`` cache as BOTH k and v, with the
     latent (the value) being the first ``kv_lora_rank`` columns.
+
+    ``pages`` switches to the paged cache: k/v become page pools
+    ``[n_pages, page_size, K, d]`` and ``pages`` the [B, npp] page table
+    (see :func:`_flash_decode_paged`); ``layout`` must be linear/paged —
+    sliding windows under paging express validity through ``start``
+    (``max(0, pos - window + 1)``), not a ring.
     """
+    if pages is not None:
+        assert layout in ("linear", "paged"), \
+            f"paged decode is linear-validity only, got layout={layout!r}"
+        return _flash_decode_paged(q, k, v, pos, start, pages,
+                                   softcap=softcap, scale=scale, dv=dv,
+                                   interpret=interpret)
     B, H, dq = q.shape
     S, K = k.shape[1], k.shape[2]
     dv = dv or v.shape[-1]

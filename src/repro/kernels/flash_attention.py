@@ -24,17 +24,16 @@ F32 = jnp.float32
 NEG = -1e30
 
 
-def _fa_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                nk: int, bq: int, bk: int, sq: int, sk: int, H: int,
                scale: float, causal: bool, window: int, softcap: float):
     """One (batch*head, q-block, k-block) grid step.
 
     ``sq``/``sk`` are the *unpadded* sequence lengths: the query-position
-    offset aligns the last real query with the last real key, and key columns
-    at ``kpos >= sk`` are grid padding that must never receive weight.
-    ``start_ref`` holds the per-batch first live key row (scalar prefetch) —
-    rows below it are left-pad KV written by the serving engine's prompt
-    bucketing and must never receive weight either.
+    offset aligns the last real query with the last real key (``sq < sk``
+    is the suffix-prefill pattern — queries continue a cached prefix), and
+    key columns at ``kpos >= sk`` are grid padding that must never receive
+    weight.
     """
     ik = pl.program_id(2)
 
@@ -56,7 +55,6 @@ def _fa_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     mask = kpos < sk  # grid padding: ragged Sk rounded up to bk
-    mask &= kpos >= start_ref[pl.program_id(0) // H]  # left-pad KV rows
     if causal:
         mask &= kpos <= qpos
     if window:
@@ -82,12 +80,11 @@ def _fa_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
-                    scale=None, softcap=0.0, start=None, interpret=False):
+                    scale=None, softcap=0.0, interpret=False):
     """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] with H % K == 0 (GQA folded in the
     BlockSpec index map).  Arbitrary Sq/Sk: ragged shapes are padded up to
     the block grid and sliced back (padded keys are masked out in-kernel).
-    ``start``: per-batch [B] first live key row (left-pad exclusion);
-    ``None`` means every row is live.  Fully-masked rows return zeros."""
+    Fully-masked rows return zeros."""
     B, H, Sq, d = q.shape
     K = k.shape[1]
     Sk = k.shape[2]
@@ -100,26 +97,24 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
         k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
     scale = scale if scale is not None else d ** -0.5
-    start = (jnp.zeros((B,), jnp.int32) if start is None
-             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
     qf = q.reshape(B * H, Sqp, d)
     kf = k.reshape(B * K, Skp, d)
     vf = v.reshape(B * K, Skp, d)
     nk = Skp // bk_
     grid = (B * H, Sqp // bq_, nk)
 
-    def kv_map(bh, iq, ik, *_):
+    def kv_map(bh, iq, ik):
         return ((bh // H) * K + (bh % H) // G, ik, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,  # start
+        num_scalar_prefetch=0,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq_, d), lambda bh, iq, ik, *_: (bh, iq, 0)),
+            pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
             pl.BlockSpec((1, bk_, d), kv_map),
             pl.BlockSpec((1, bk_, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, bq_, d), lambda bh, iq, ik, *_: (bh, iq, 0)),
+        out_specs=pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq_, 1), F32),
             pltpu.VMEM((bq_, 1), F32),
@@ -133,5 +128,5 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * H, Sqp, d), q.dtype),
         interpret=interpret,
-    )(start, qf, kf, vf)
+    )(qf, kf, vf)
     return out.reshape(B, H, Sqp, d)[:, :, :Sq]

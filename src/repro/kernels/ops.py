@@ -8,6 +8,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.cache import CacheLayout
 from repro.kernels import ref
 from repro.kernels.block_gemm import block_gemm, block_gemm_int8
 from repro.kernels.decode_attention import flash_decode
@@ -45,36 +46,42 @@ def cgra_matmul_int8(a_q, b_q, a_scale, b_scale, mode: str = "reference",
                            interpret=(mode == "interpret"), out_dtype=out_dtype)
 
 
-def attention(q, k, v, *, causal=True, window=0, softcap=0.0, start=None,
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
               mode: str = "reference", bq=128, bk=128):
-    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok.
-    ``start``: per-batch first live key row (left-pad exclusion)."""
+    """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok;
+    causal masking aligns the last query with the last key (``Sq < Sk`` is
+    the suffix-prefill pattern over a cached prefix)."""
     if mode == "reference":
         G = q.shape[1] // k.shape[1]
         kb = jnp.repeat(k, G, axis=1)
         vb = jnp.repeat(v, G, axis=1)
         return ref.flash_attention_ref(q, kb, vb, causal=causal, window=window,
-                                       softcap=softcap, start=start)
+                                       softcap=softcap)
     return flash_attention(q, k, v, causal=causal, window=window,
-                           softcap=softcap, start=start, bq=bq, bk=bk,
+                           softcap=softcap, bq=bq, bk=bk,
                            interpret=(mode == "interpret"))
 
 
-def attend_decode(q, k, v, pos, start=None, *, layout: str = "linear",
-                  softcap=0.0, scale=None, dv=None, mode: str = "reference",
-                  bk=128):
+def attend_decode(q, k, v, pos, start=None, *,
+                  layout: str | CacheLayout = CacheLayout.LINEAR,
+                  softcap=0.0, scale=None, dv=None, pages=None,
+                  mode: str = "reference", bk=128):
     """Batched single-token decode over a slot-indexed KV cache.
 
     Cache-native layout (no hot-path transposes): q: [B,H,dq];
     k: [B,S,K,dq]; v: [B,S,K,>=dv] -> [B,H,dv].  ``pos``/``start`` are the
-    per-slot [B] validity bounds; ``layout`` is the cache layout ("linear"
-    global / "ring" sliding-window).  ``dv`` narrows the value read to the
-    first dv columns — MLA latent decode passes its concatenated
-    ``[latent | k_rope]`` cache as both k and v.
+    per-slot [B] validity bounds; ``layout`` is the :class:`CacheLayout`
+    (LINEAR global / RING sliding-window / PAGED block-table).  ``dv``
+    narrows the value read to the first dv columns — MLA latent decode
+    passes its concatenated ``[latent | k_rope]`` cache as both k and v.
+    ``pages`` ([B, npp] int32) switches k/v to page pools
+    ``[n_pages, page_size, K, d]`` indirected through the table.
     """
+    layout = str(layout)
     if mode == "reference":
         return ref.flash_decode_ref(q, k, v, pos, start, layout=layout,
-                                    softcap=softcap, scale=scale, dv=dv)
+                                    softcap=softcap, scale=scale, dv=dv,
+                                    pages=pages)
     return flash_decode(q, k, v, pos, start, layout=layout, softcap=softcap,
-                        scale=scale, dv=dv, bk=bk,
+                        scale=scale, dv=dv, bk=bk, pages=pages,
                         interpret=(mode == "interpret"))

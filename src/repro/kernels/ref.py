@@ -23,11 +23,11 @@ def block_gemm_int8_ref(a_q, b_q, a_scale, b_scale, out_dtype=F32):
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
-                        softcap=0.0, start=None):
+                        softcap=0.0):
     """q: [B,H,Sq,d], k/v: [B,H,Sk,d] (kv heads already broadcast).
-    ``start``: per-batch [B] first live key row — rows ``< start`` are
-    left-pad KV and receive no weight.  Fully-masked rows return zeros
-    (matching the Pallas kernel)."""
+    Causal masking aligns the last query with the last key (``Sq < Sk`` is
+    the suffix-prefill pattern: queries continue a cached prefix).
+    Fully-masked rows return zeros (matching the Pallas kernel)."""
     B, H, Sq, d = q.shape
     Sk = k.shape[2]
     scale = scale if scale is not None else d ** -0.5
@@ -42,9 +42,6 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
     if window:
         mask &= kpos > qpos + (Sk - Sq) - window
     mask = jnp.broadcast_to(mask[None], (B, Sq, Sk))
-    if start is not None:
-        st = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
-        mask &= kpos[None] >= st[:, None, None]
     s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(mask[:, None], p, 0.0)  # all-masked row -> zeros, not 1/Sk
@@ -52,7 +49,7 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
 
 
 def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
-                     softcap=0.0, scale=None, dv=None):
+                     softcap=0.0, scale=None, dv=None, pages=None):
     """Oracle for ``flash_decode``: batched single-token decode over a
     slot-indexed cache in its native layout.  q: [B,H,dq]; k: [B,S,K,dq];
     v: [B,S,K,>=dv]; pos/start: [B] int32 (broadcastable).  ``layout``:
@@ -60,7 +57,23 @@ def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
     row ``pos - ((pos - j) mod S)``; live iff that row is
     ``>= max(start, 0)``).  ``dv`` reads only the first dv value columns
     (MLA passes one concatenated cache as both k and v).  All-invalid slots
-    return zeros."""
+    return zeros.
+
+    Paged path: ``pages`` [B, npp] int32 page tables over pools k/v of shape
+    [n_pages, page_size, K, d]; logical row ``r`` of slot ``b`` lives at
+    ``(pages[b, r // page_size], r % page_size)``.  The oracle gathers each
+    slot's pages into a dense [B, npp * page_size, K, d] cache and falls
+    through to the linear rule — the page table is pure indirection, the
+    validity semantics are unchanged."""
+    if pages is not None:
+        assert layout in ("linear", "paged"), layout
+        pages = jnp.asarray(pages, jnp.int32)
+        B_, npp = pages.shape
+        ps = k.shape[1]
+        shared = v is k
+        k = k[pages].reshape(B_, npp * ps, *k.shape[2:])
+        v = k if shared else v[pages].reshape(B_, npp * ps, *v.shape[2:])
+        layout = "linear"
     B, H, dq = q.shape
     S, K = k.shape[1], k.shape[2]
     G = H // K

@@ -1,7 +1,8 @@
 """Production serving driver: continuous-batching request loop.
 
 Streams a Poisson arrival process through the engine — requests are admitted
-into KV-cache slots as they free up, so the decode batch stays full without
+into pages of the shared KV pool as they free up (common prompt prefixes
+share pages through the radix cache), so the decode batch stays full without
 ever recompiling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
@@ -17,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.models import model as M
-from repro.serving.engine import Engine, bytes_tokenizer_encode
+from repro.serving import Engine, EngineConfig, bytes_tokenizer_encode
 
 
 def main():
@@ -29,8 +30,14 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = all at once")
-    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="max concurrent sequences (decode batch)")
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="KV page-pool size (default: batch*max_len worth)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix prefix reuse")
     ap.add_argument("--kernel-mode", default=None,
                     choices=["reference", "interpret", "pallas"],
                     help="route GEMMs/attention through the CGRA Pallas "
@@ -43,8 +50,10 @@ def main():
     cfg = reduce_config(get_config(args.arch)) if args.reduced \
         else get_config(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_len=args.max_len, max_slots=args.slots,
-                 kernel_mode=args.kernel_mode, quant=args.quant)
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=args.max_len, max_batch=args.batch, page_size=args.page_size,
+        n_pages=args.pages, prefix_cache=not args.no_prefix_cache,
+        kernel_mode=args.kernel_mode, quant=args.quant))
 
     rng = np.random.RandomState(0)
     prompts = [bytes_tokenizer_encode(f"request {i}: " + "x" * rng.randint(4, 40),
@@ -75,9 +84,11 @@ def main():
     p50 = lat[len(lat) // 2]
     p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
     print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
-          f"quant={eng.cfg.quant} requests={len(results)} slots={args.slots} "
+          f"quant={eng.cfg.quant} requests={len(results)} "
+          f"batch={args.batch} pages={eng.pool.n_pages} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
           f"throughput={stats.tokens_per_s:.1f} tok/s "
+          f"prefix_hit={eng.prefix_hit_rate:.0%} "
           f"p50={p50:.2f}s p99={p99:.2f}s")
 
 

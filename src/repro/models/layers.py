@@ -26,6 +26,7 @@ import functools
 
 from repro.configs.base import ArchConfig
 from repro.core import round_up
+from repro.core.cache import CacheLayout
 from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
 from repro.core.quant import QTensor
 from repro.kernels.ops import attend_decode as kernel_attend_decode
@@ -81,22 +82,18 @@ def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = ()):
 
 
 def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
-                    window: int = 0, chunk: int = 0, softcap: float = 0.0,
-                    start=None):
+                    window: int = 0, chunk: int = 0, softcap: float = 0.0):
     """kernel_mode-aware attention core.  Layout as ``attend``:
     q [B,Sq,H,d], k/v [B,Sk,K,d] -> [B,Sq,H,d].
 
     The flash kernel path covers the contiguous self/cross-attention pattern
-    used by forward/prefill (positions are aranges — possibly shifted by a
-    per-row left-pad offset, which preserves all relative masks — with the
-    last query aligned with the last key), preserving GQA grouping, sliding
-    windows and logit softcap.  ``start`` is the per-batch first live key
-    row: rows below it are the serving engine's left-pad KV and must receive
-    no weight (the jnp path gets this for free from their negative
-    positions).  The jnp ``attend`` stays the oracle for
-    ``kernel_mode="reference"`` and for the roofline ATTN_STUB traffic
-    stand-in; MLA keeps ``attend`` unconditionally (its q/v head dims
-    differ, which the prefill kernel accumulator does not model).
+    used by forward/prefill (positions are aranges with the last query
+    aligned with the last key — ``Sq < Sk`` is suffix prefill over a cached
+    prefix), preserving GQA grouping, sliding windows and logit softcap.
+    The jnp ``attend`` stays the oracle for ``kernel_mode="reference"`` and
+    for the roofline ATTN_STUB traffic stand-in; MLA keeps ``attend``
+    unconditionally (its q/v head dims differ, which the prefill kernel
+    accumulator does not model).
 
     Differentiability: the block GEMMs are trainable in every mode
     (``cgra_matmul`` carries a custom VJP) but the flash kernel has no VJP —
@@ -109,28 +106,31 @@ def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
     o = kernel_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), causal=causal, window=window,
-        softcap=softcap, start=start, mode=cfg.kernel_mode)
+        softcap=softcap, mode=cfg.kernel_mode)
     return o.transpose(0, 2, 1, 3)
 
 
 def dispatch_attend_decode(cfg: ArchConfig, q, k, v, pos, start, *,
-                           layout: str = "linear", softcap: float = 0.0,
-                           scale=None, dv: int | None = None):
+                           layout: str | CacheLayout = CacheLayout.LINEAR,
+                           softcap: float = 0.0, scale=None,
+                           dv: int | None = None, pages=None):
     """kernel_mode-aware single-token decode core.
 
     Cache-native layout in, model layout out: q [B,1,H,dq], cache k/v
     [B,S,K,d] -> [B,1,H,dv] — the kernel blocks the cache's S axis
     directly, so the hot path never transposes or copies it.
     ``pos``/``start`` are the per-slot [B] validity bounds (cache row of
-    the current token / first non-pad row); ``layout`` selects the linear
-    (global) or ring (sliding-window) validity rule; ``dv`` narrows the
-    value read (MLA passes one concatenated cache as both k and v).
+    the current token / first live row — sliding-window layers on a linear
+    or paged cache pass ``max(0, pos - window + 1)``); ``layout`` is the
+    :class:`CacheLayout` validity rule; ``dv`` narrows the value read (MLA
+    passes one concatenated cache as both k and v); ``pages`` ([B, npp])
+    switches k/v to page pools indirected through the per-slot page table.
     Routes to the jnp oracle (``reference``) or the flash-decode Pallas
     kernel (``interpret`` | ``pallas``), which streams only live k-blocks.
     """
     o = kernel_attend_decode(q[:, 0], k, v, pos, start, layout=layout,
                              softcap=softcap, scale=scale, dv=dv,
-                             mode=cfg.kernel_mode)
+                             pages=pages, mode=cfg.kernel_mode)
     return o[:, None]
 
 
@@ -327,26 +327,56 @@ def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int, local: bool) -> dict
     }
 
 
+def _page_row_write(pool, new_row, pages, pos):
+    """Scatter one row per sequence into a page pool.
+
+    pool: [P, ps, ...]; new_row: [B, ...]; pages: [B, npp]; pos: [B].
+    Logical row ``pos`` of sequence ``b`` lands at pool row
+    ``(pages[b, pos // ps], pos % ps)``.  Rows whose page index would fall
+    off the table are dropped, never clamped (the engine errors on
+    capacity overrun before this can matter)."""
+    P, ps = pool.shape[0], pool.shape[1]
+    B = new_row.shape[0]
+    npp = pages.shape[1]
+    ipage = pos // ps
+    flat = jnp.where(ipage < npp,
+                     pages[jnp.arange(B), jnp.minimum(ipage, npp - 1)] * ps
+                     + pos % ps,
+                     P * ps)  # out of range -> dropped by mode="drop"
+    pooled = pool.reshape(P * ps, *pool.shape[2:])
+    pooled = pooled.at[flat].set(new_row.astype(pool.dtype), mode="drop")
+    return pooled.reshape(pool.shape)
+
+
 def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
-                 attn_chunk: int = 0, start=None):
+                 attn_chunk: int = 0, past_kv=None, full_cache: bool = False):
     """Returns (out, cache).  Cache keys are post-RoPE (standard practice).
 
-    ``positions`` may be [S] or, for left-pad-bucketed serving prefills,
-    [B, S] = ``arange(S) - start`` so real tokens sit at 0..len-1 and pad
-    rows at negative positions (excluded by the attention mask and by
-    decode validity; ``start`` feeds the same exclusion to the flash
-    kernel, which sees row indices, not positions).
+    ``positions``: [S] absolute positions of the prompt rows (for suffix
+    prefill over a cached prefix of length ``s``, ``s + arange(S)``).
+    ``past_kv`` ({"k","v"}: [B, s, K, dh], post-RoPE) is that prefix's KV,
+    gathered from the paged cache — attention runs over the dense
+    concat(past, new) with the last query aligned with the last key, and
+    the returned cache holds only the NEW rows (the caller owns the prefix
+    pages already).  ``full_cache`` keeps sliding-window layers' full
+    linear k/v instead of the rolled ring (the paged engine stores every
+    row and windows via decode validity).
     """
     q, k, v = _qkv(cfg, p, x, x)
     theta = cfg.rope_theta if not local else 10_000.0
     q = rope(q, positions, theta)
     k = rope(k, positions, theta)
     window = cfg.window_size if local else 0
-    o = dispatch_attend(cfg, q, k, v, positions, positions, causal=True,
+    k_all, v_all = k, v
+    if past_kv is not None:
+        k_all = jnp.concatenate([past_kv["k"].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([past_kv["v"].astype(v.dtype), v], axis=1)
+    k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)
+    o = dispatch_attend(cfg, q, k_all, v_all, positions, k_pos, causal=True,
                         window=window, chunk=attn_chunk,
-                        softcap=cfg.logit_softcap, start=start)
+                        softcap=cfg.logit_softcap)
     out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
-    if window and k.shape[1] > window:
+    if window and not full_cache and past_kv is None and k.shape[1] > window:
         # ring-buffer cache: keep the last `window` keys, rolled so entry
         # (pos % window) holds absolute position pos — decode continues the
         # ring seamlessly
@@ -357,45 +387,57 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
 
 
 def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool,
-                start=None):
+                pages=None):
     """One-token decode.  x: [B,1,D]; pos: scalar int32 or [B] int32 (cache
     row of the current token, per batch slot — continuous batching runs
-    every slot at its own offset); ``start``: per-slot left-pad offset (the
-    first live cache row), so RoPE positions are ``pos - start`` and rows
-    ``< start`` never receive weight.
+    every slot at its own offset).
 
-    Local layers use a ring-buffer cache of size `window` (write at
-    ``pos % window``); global layers write at ``pos``.  A global-layer write
-    at ``pos >= S`` is *dropped* (``mode="drop"``) rather than clamped onto
-    the last slot — overrunning the cache must never corrupt slot ``S-1``;
-    the serving engine refuses to decode past capacity (explicit length
-    error) before this can happen.
+    Unpaged: local layers use a ring-buffer cache of size `window` (write
+    at ``pos % window``); global layers write at ``pos``.  A global-layer
+    write at ``pos >= S`` is *dropped* (``mode="drop"``) rather than
+    clamped onto the last slot — overrunning the cache must never corrupt
+    slot ``S-1``; the serving engine refuses to decode past capacity
+    (explicit length error) before this can happen.
 
-    The attention core routes through :func:`dispatch_attend_decode`
-    (validity: linear rows ``[start, pos]``, ring entries recovered from
-    ``pos``); RoPE is pre-applied to cached keys, so scores need no
-    position reconstruction.
+    Paged (``pages`` given): the cache is a page pool [P, ps, K, dh] shared
+    across the batch; the write lands at the page-table row for ``pos`` and
+    attention follows the table (CacheLayout.PAGED).  Sliding-window layers
+    store full rows like global ones and window via the validity lower
+    bound ``start = max(0, pos - window + 1)`` — no ring under paging.
+
+    The attention core routes through :func:`dispatch_attend_decode`;
+    RoPE is pre-applied to cached keys, so scores need no position
+    reconstruction.
     """
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
-    start = (jnp.zeros((B,), jnp.int32) if start is None
-             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
     q, k_new, v_new = _qkv(cfg, p, x, x)
     theta = cfg.rope_theta if not local else 10_000.0
-    rp = (pos - start)[:, None]  # logical position: pads carry no offset
+    rp = pos[:, None]
     q = rope(q, rp, theta)
     k_new = rope(k_new, rp, theta)
-    S = cache["k"].shape[1]
-    ring = bool(local and cfg.window_size)
-    widx = (pos % S) if ring else pos
-    bidx = jnp.arange(B)
-    k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype),
-                                      mode="drop")
-    v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype),
-                                      mode="drop")
-    o = dispatch_attend_decode(cfg, q, k, v, pos, start,
-                               layout="ring" if ring else "linear",
-                               softcap=cfg.logit_softcap)
+    window = cfg.window_size if local else 0
+    if pages is not None:
+        pages = jnp.asarray(pages, jnp.int32)
+        k = _page_row_write(cache["k"], k_new[:, 0], pages, pos)
+        v = _page_row_write(cache["v"], v_new[:, 0], pages, pos)
+        start = jnp.maximum(pos - window + 1, 0) if window else None
+        o = dispatch_attend_decode(cfg, q, k, v, pos, start,
+                                   layout=CacheLayout.PAGED, pages=pages,
+                                   softcap=cfg.logit_softcap)
+    else:
+        S = cache["k"].shape[1]
+        ring = bool(local and cfg.window_size)
+        widx = (pos % S) if ring else pos
+        bidx = jnp.arange(B)
+        k = cache["k"].at[bidx, widx].set(k_new[:, 0].astype(cache["k"].dtype),
+                                          mode="drop")
+        v = cache["v"].at[bidx, widx].set(v_new[:, 0].astype(cache["v"].dtype),
+                                          mode="drop")
+        o = dispatch_attend_decode(
+            cfg, q, k, v, pos, None,
+            layout=CacheLayout.RING if ring else CacheLayout.LINEAR,
+            softcap=cfg.logit_softcap)
     H = q.shape[2]
     o = o.reshape(B, 1, H * v.shape[-1])
     out = dense_proj(cfg, o, p["wo"])
@@ -472,7 +514,7 @@ def mla_prefill(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
                                         k_rope.astype(latent.dtype)], -1)}
 
 
-def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, start=None):
+def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, pages=None):
     """Weight-absorbed MLA decode: attention runs in the latent space, so the
     per-step cost is O(S * kv_lora_rank) instead of O(S * H * head_dim) —
     the cached latent is never re-expanded.  (This is the paper's data-reuse
@@ -482,34 +524,39 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, start=None):
     ``[q_absorbed | q_rope]`` against the fused ``[latent | k_rope]`` cache,
     which is passed as *both* keys (full width, qk dim ``kvr +
     qk_rope_dim``) and values (first ``kvr`` columns, selected by the
-    BlockSpec — no slicing copy).  ``start`` excludes left-pad cache rows,
-    exactly as in :func:`attn_decode`.
+    BlockSpec — no slicing copy).  With ``pages`` the cache is a
+    [P, ps, kvr+dr] page pool written through the per-slot table, exactly
+    as in :func:`attn_decode`.
     """
     dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     B = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # slot-indexed
-    start = (jnp.zeros((B,), jnp.int32) if start is None
-             else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,)))
-    rp = (pos - start)[:, None]  # logical position: pads carry no offset
+    rp = pos[:, None]
     q_nope, q_rope = _mla_q(cfg, p, x, rp)  # [B,1,H,dn],[B,1,H,dr]
     latent_new, k_rope_new = _mla_latent(cfg, p, x, rp)
-    bidx = jnp.arange(B)
     # out-of-capacity writes are dropped, never clamped onto the last row
     # (same invariant as attn_decode; the engine errors before this happens)
     row = jnp.concatenate([latent_new, k_rope_new.astype(latent_new.dtype)],
                           -1)[:, 0]
-    kv = cache["kv"].at[bidx, pos].set(row.astype(cache["kv"].dtype),
-                                       mode="drop")
+    if pages is not None:
+        pages = jnp.asarray(pages, jnp.int32)
+        kv = _page_row_write(cache["kv"], row, pages, pos)
+        kv4 = kv[:, :, None]  # [P,ps,1,kvr+dr] pool; same array as k AND v
+    else:
+        bidx = jnp.arange(B)
+        kv = cache["kv"].at[bidx, pos].set(row.astype(cache["kv"].dtype),
+                                           mode="drop")
+        kv4 = kv[:, :, None]  # [B,S,1,kvr+dr]; same array as k AND v
     wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
     wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
     q_cat = jnp.concatenate([q_lat, q_rope.astype(q_lat.dtype)], -1)
-    kv4 = kv[:, :, None]  # [B,S,1,kvr+dr]; same array as k AND v (dv slices)
     o_lat = dispatch_attend_decode(
-        cfg, q_cat, kv4, kv4, pos, start, layout="linear",
-        scale=(dn + cfg.qk_rope_dim) ** -0.5, dv=kvr)  # [B,1,H,kvr]
+        cfg, q_cat, kv4, kv4, pos, None,
+        layout=CacheLayout.PAGED if pages is not None else CacheLayout.LINEAR,
+        pages=pages, scale=(dn + cfg.qk_rope_dim) ** -0.5, dv=kvr)
     o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)  # expand to v space
     out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     return out, {"kv": kv}

@@ -181,18 +181,77 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int):
         tree, is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+def paged_cache_specs(cfg: ArchConfig, max_batch: int, n_pages: int,
+                      page_size: int, main_repeats: int | None = None) -> list:
+    """Paged decode-cache spec tree: every ``kv_seq`` leaf becomes a page
+    *pool* ``[n_pages, page_size, ...]`` shared across sequences (per-sequence
+    page tables map logical rows to pool pages; page 0 is the engine's
+    reserved trash page).  Sliding-window layers get full-size pages like
+    global ones — under paging they window via the decode validity bound,
+    not a ring.  Leaves without a ``kv_seq`` axis (SSM state, cross-attn
+    image KV) stay slot-indexed ``[max_batch, ...]``."""
+    specs = cache_specs(cfg, max_batch, page_size, main_repeats)
+
+    def to_pool(spec):
+        if "kv_seq" not in spec.axes:
+            return spec
+        b = spec.axes.index("batch")
+        s = spec.axes.index("kv_seq")
+        shape = list(spec.shape)
+        shape[b], shape[s] = n_pages, page_size  # window rings un-shrunk
+        axes = list(spec.axes)
+        axes[b] = None  # the pool's page axis is not a batch axis
+        return ParamSpec(tuple(shape), tuple(axes), "zeros", spec.dtype)
+
+    return jax.tree.map(to_pool, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_paged_cache(cfg: ArchConfig, max_batch: int, n_pages: int,
+                     page_size: int):
+    tree = paged_cache_specs(cfg, max_batch, n_pages, page_size)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def pad_cache_len(cfg: ArchConfig, caches, new_len: int,
+                  main_repeats: int | None = None):
+    """Zero-pad every ``kv_seq`` dim of a prefill cache tree up to
+    ``new_len`` rows (decode capacity).  Replaces the deleted ``grow_cache``
+    for the direct ``prefill(...)`` → ``decode_step`` loop; the serving
+    engine allocates fixed-capacity paged pools instead."""
+    specs = cache_specs(cfg, 1, new_len, main_repeats)
+
+    def grow(spec, leaf):
+        if "kv_seq" not in spec.axes:
+            return leaf
+        axis = spec.axes.index("kv_seq")
+        pad = spec.shape[axis] - leaf.shape[axis]
+        if pad <= 0:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(leaf, widths)
+
+    return jax.tree.map(grow, specs, caches,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
 # ---------------------------------------------------------------------------
 # Layer application
 # ---------------------------------------------------------------------------
 
 def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
-                 img, mode: str, cache=None, pos=None, start=None,
-                 attn_chunk: int = 0):
-    """Returns (x, new_cache, aux).  ``start``: per-slot left-pad offset
-    (serving prefill buckets); attention mixers exclude cache rows below it
-    and shift RoPE so real tokens sit at positions 0..len-1.  SSM mixers
-    scan pad tokens into their state — left-pad serving of SSM/hybrid archs
-    is not pollution-free (use exact-length buckets there)."""
+                 img, mode: str, cache=None, pos=None, pages=None,
+                 full_kv: bool = False, attn_chunk: int = 0):
+    """Returns (x, new_cache, aux).
+
+    decode: ``cache`` is the layer's KV cache (slot-indexed, or a page pool
+    when ``pages`` [B, npp] is given).  prefill: ``cache``, if set, is the
+    layer's *past* KV ({"k","v"} [B, s, K, dh], post-RoPE — a radix-cache
+    prefix hit) and ``positions`` must already be offset by ``s``;
+    ``full_kv`` keeps sliding-window layers' full linear KV (paged serving)
+    instead of the rolled ring."""
     aux = jnp.zeros((), F32)
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
@@ -207,7 +266,7 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
     elif cfg.use_mla:
         if mode == "decode":
             m, new_cache = L.mla_decode(cfg, p["mixer"], cache, h, pos,
-                                        start=start)
+                                        pages=pages)
         elif mode == "prefill":
             m, new_cache = L.mla_prefill(cfg, p["mixer"], h, positions, attn_chunk)
         else:
@@ -216,10 +275,10 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
         mp = p["mixer"]
         if mode == "decode":
             m, sc = L.attn_decode(cfg, mp["self"], {"k": cache["k"], "v": cache["v"]},
-                                  h, pos, local=False, start=start)
+                                  h, pos, local=False, pages=pages)
         elif mode == "prefill":
             m, sc = L.attn_prefill(cfg, mp["self"], h, positions, local=False,
-                                   attn_chunk=attn_chunk, start=start)
+                                   attn_chunk=attn_chunk)
         else:
             m = L.attn_forward(cfg, mp["self"], h, positions, local=False,
                                attn_chunk=attn_chunk)
@@ -234,10 +293,11 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
     else:
         if mode == "decode":
             m, new_cache = L.attn_decode(cfg, p["mixer"], cache, h, pos,
-                                         local=local, start=start)
+                                         local=local, pages=pages)
         elif mode == "prefill":
             m, new_cache = L.attn_prefill(cfg, p["mixer"], h, positions, local=local,
-                                          attn_chunk=attn_chunk, start=start)
+                                          attn_chunk=attn_chunk, past_kv=cache,
+                                          full_cache=full_kv)
         else:
             m = L.attn_forward(cfg, p["mixer"], h, positions, local=local,
                                attn_chunk=attn_chunk)
@@ -267,8 +327,8 @@ def _remat(cfg: ArchConfig, fn):
 
 
 def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
-                 mode: str, caches=None, pos=None, start=None,
-                 attn_chunk: int = 0, aux0=None):
+                 mode: str, caches=None, pos=None, pages=None,
+                 full_kv: bool = False, attn_chunk: int = 0, aux0=None):
     """Scan `stage.repeats` iterations of the layer group."""
     group = stage.group
 
@@ -281,8 +341,8 @@ def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
             c_in = None if lc is None else lc[str(gi)]
             xc, nc, a = _apply_layer(cfg, spec, lp[str(gi)], xc,
                                      positions=positions, img=img, mode=mode,
-                                     cache=c_in, pos=pos, start=start,
-                                     attn_chunk=attn_chunk)
+                                     cache=c_in, pos=pos, pages=pages,
+                                     full_kv=full_kv, attn_chunk=attn_chunk)
             if nc is not None:
                 new_caches[str(gi)] = nc
             aux = aux + a
@@ -350,15 +410,19 @@ def lm_logits(cfg: ArchConfig, params, hidden):
 # ---------------------------------------------------------------------------
 
 def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
-                   caches=None, pos=None, start=None, attn_chunk: int = 0,
+                   caches=None, pos=None, pages=None, past_len: int = 0,
+                   full_kv: bool = False, attn_chunk: int = 0,
                    main_repeats: int | None = None):
     """Run the stack; returns (hidden, aux_loss, new_caches_per_stage).
 
-    ``start`` (scalar or [B] int32) is the per-sequence left-pad offset from
-    the serving engine's prompt bucketing: prefill positions become
-    ``arange(S) - start`` (real tokens at 0..len-1, pad rows negative — the
-    attention masks exclude them), and decode validity/RoPE use it so the
-    outputs are invariant to the bucket size.
+    decode: ``caches`` is the per-stage cache tree; ``pages`` ([B, npp]
+    int32) switches attention caches to paged pools indirected through the
+    per-slot page table.  prefill: ``caches``, if given, is the *past* KV
+    tree of a cached prefix of ``past_len`` tokens (suffix prefill — the
+    prompt rows take positions ``past_len + arange(S)`` and attend over
+    concat(past, new)); ``full_kv`` makes sliding-window layers return
+    their full linear KV instead of a rolled ring (paged serving stores
+    every row and windows at decode time).
     """
     x = embed_inputs(cfg, params, batch)
     x = constrain(x, ("batch", "seq", "embed"))
@@ -367,18 +431,16 @@ def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
     if mode == "decode":
         positions = None
     else:
-        positions = jnp.arange(seqlen, dtype=jnp.int32)
-        if start is not None:
-            st = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (x.shape[0],))
-            positions = positions[None, :] - st[:, None]  # [B, S] per-row
+        positions = jnp.arange(seqlen, dtype=jnp.int32) + jnp.int32(past_len)
     aux = jnp.zeros((), F32)
     new_caches = []
     for si, stage in enumerate(cfg.stages(main_repeats)):
         c = None if caches is None else caches[si]
         x, aux, ys = _apply_stage(cfg, stage, params["stages"][si], x,
                                   positions=positions, img=img, mode=mode,
-                                  caches=c, pos=pos, start=start,
-                                  attn_chunk=attn_chunk, aux0=aux)
+                                  caches=c, pos=pos, pages=pages,
+                                  full_kv=full_kv, attn_chunk=attn_chunk,
+                                  aux0=aux)
         new_caches.append(ys)
     x = L.apply_norm(cfg, params["final_norm"], x)
     return x, aux, (new_caches if mode in ("prefill", "decode") else None)
@@ -406,28 +468,37 @@ def loss_fn(cfg: ArchConfig, params, batch: dict, *, attn_chunk: int = 0,
     return loss, {"ce": ce, "aux": aux}
 
 
-def prefill(cfg: ArchConfig, params, batch: dict, *, start=None,
-            attn_chunk: int = 0, main_repeats: int | None = None):
-    """Returns (last-token logits, caches).  ``start``: left-pad offset per
-    sequence (see :func:`forward_hidden`) — pad rows are excluded from
-    attention and real tokens keep bucket-independent RoPE positions."""
+def prefill(cfg: ArchConfig, params, batch: dict, *, past=None,
+            past_len: int = 0, full_kv: bool = False,
+            cache_len: int | None = None, attn_chunk: int = 0,
+            main_repeats: int | None = None):
+    """Returns (last-token logits, caches).
+
+    ``past``/``past_len``: cached-prefix KV tree + its token length (suffix
+    prefill over a radix-cache hit; the returned caches hold only the new
+    rows).  ``full_kv``: keep sliding-window layers' full linear KV (paged
+    serving).  ``cache_len``: zero-pad every kv_seq dim to this capacity so
+    the caches can be decoded into directly (replaces ``grow_cache``)."""
     hidden, _, caches = forward_hidden(cfg, params, batch, mode="prefill",
-                                       start=start, attn_chunk=attn_chunk,
+                                       caches=past, past_len=past_len,
+                                       full_kv=full_kv, attn_chunk=attn_chunk,
                                        main_repeats=main_repeats)
     logits = lm_logits(cfg, params, hidden[:, -1:])
+    if cache_len is not None:
+        caches = pad_cache_len(cfg, caches, cache_len, main_repeats)
     return logits, caches
 
 
-def decode_step(cfg: ArchConfig, params, caches, token, pos, *, start=None,
+def decode_step(cfg: ArchConfig, params, caches, token, pos, *, pages=None,
                 main_repeats: int | None = None):
     """One-token decode.  token: [B,1] int32; pos: scalar int32 (all slots in
     lock-step) or [B] int32 (slot-indexed — every sequence at its own offset,
-    as driven by the continuous-batching engine).  ``start`` (scalar or [B])
-    is the left-pad offset: cache rows below it stay masked and the RoPE
-    position of the current token is ``pos - start``."""
+    as driven by the continuous-batching engine).  ``pages`` ([B, npp] int32)
+    switches attention caches to paged pools: the new row is written through
+    the table and attention follows it (see ``layers.attn_decode``)."""
     batch = {"tokens": token}
     hidden, _, new_caches = forward_hidden(cfg, params, batch, mode="decode",
-                                           caches=caches, pos=pos, start=start,
+                                           caches=caches, pos=pos, pages=pages,
                                            main_repeats=main_repeats)
     logits = lm_logits(cfg, params, hidden)
     return logits, new_caches

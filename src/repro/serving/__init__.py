@@ -1,3 +1,6 @@
+from repro.core.cache import CacheLayout  # noqa: F401
+from repro.serving.config import CacheSpec, EngineConfig  # noqa: F401
 from repro.serving.engine import (Engine, Request, RequestResult,  # noqa: F401
                                   ServeStats, bytes_tokenizer_decode,
-                                  bytes_tokenizer_encode, grow_cache)
+                                  bytes_tokenizer_encode)
+from repro.serving.paging import PagePool, PrefixMatch, RadixCache  # noqa: F401

@@ -1,0 +1,94 @@
+"""Public serving configuration surface: ``EngineConfig`` + ``CacheSpec``.
+
+``EngineConfig`` is the one frozen object that fully determines an engine's
+compiled shapes and memory: previous PRs accreted these as loose ``Engine``
+kwargs (``max_slots=``, ``prefill_bucket=``, ``kernel_mode=``, ...); the old
+spelling still works through a ``DeprecationWarning`` shim in ``Engine``.
+
+``CacheSpec`` describes the engine's KV-cache geometry (layout, page size,
+pool size) and is derived from the config via ``EngineConfig.cache_spec()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import round_up
+from repro.core.cache import CacheLayout
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """Geometry of a serving KV cache.
+
+    ``layout=PAGED``: ``n_pages`` pages of ``page_size`` rows each (page 0 is
+    the engine's reserved trash page), page tables of width
+    ``pages_per_seq`` rows.  ``max_rows`` is the usable KV row budget —
+    the number every fixed-slot-vs-paged capacity comparison is made at.
+    """
+    layout: CacheLayout = CacheLayout.PAGED
+    page_size: int = 64
+    n_pages: int = 0
+    max_len: int = 512
+
+    @property
+    def pages_per_seq(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def max_rows(self) -> int:
+        """Usable KV rows (the trash page is bookkeeping, not capacity)."""
+        return (self.n_pages - 1) * self.page_size
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Everything the serving engine compiles and allocates against.
+
+    page_size:     KV rows per page (multiple of 8 — TPU sublane alignment)
+    n_pages:       page-pool size, incl. the reserved trash page; ``None``
+                   derives ``max_batch * ceil(max_len / page_size) + 1`` (the
+                   fixed-slot-equivalent budget, so legacy configs keep their
+                   old capacity)
+    max_batch:     concurrent sequences (the decode batch dimension)
+    max_len:       per-sequence row cap; admission requires
+                   ``len(prompt) + max_new <= max_len`` (exact — paging has
+                   no pad rows to budget for)
+    prefix_cache:  share KV pages between requests with a common prompt
+                   prefix (radix tree + refcounted copy-on-write); auto-
+                   disabled for architectures with SSM/cross-attention
+                   mixers, whose prefill is not prefix-decomposable
+    decode_chunk:  scan steps per compiled decode call
+    eos_id:        optional stop token (checked inside the scan)
+    max_queue:     admission-control bound; ``submit`` refuses beyond it
+    kernel_mode:   override ``cfg.kernel_mode`` (reference|interpret|pallas)
+    quant:         override ``cfg.quant`` ("w8a8" quantizes weights at init)
+    """
+    page_size: int = 64
+    n_pages: int | None = None
+    max_batch: int = 8
+    max_len: int = 512
+    prefix_cache: bool = True
+    decode_chunk: int = 8
+    eos_id: int | None = None
+    max_queue: int = 1024
+    kernel_mode: str | None = None
+    quant: str | None = None
+
+    def __post_init__(self):
+        if self.page_size < 8 or self.page_size % 8:
+            raise ValueError(f"page_size={self.page_size} must be a positive "
+                             f"multiple of 8 (TPU sublane alignment)")
+        if self.max_len % self.page_size:
+            object.__setattr__(self, "max_len",
+                               round_up(self.max_len, self.page_size))
+        if self.n_pages is None:
+            per_seq = self.max_len // self.page_size
+            object.__setattr__(self, "n_pages",
+                               self.max_batch * per_seq + 1)
+        if self.n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (one usable page plus the "
+                             "reserved trash page)")
+
+    def cache_spec(self) -> CacheSpec:
+        return CacheSpec(CacheLayout.PAGED, self.page_size, self.n_pages,
+                         self.max_len)

@@ -1,18 +1,32 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine over a paged KV cache.
 
 Requests enter a bounded queue (admission control), get prefilled one at a
-time into a free *slot* of a fixed-size batched KV cache, and decode together
-in a ``lax.scan`` over ``decode_chunk`` steps — the hot path is one compiled
-function, no per-token Python dispatch.  Finished sequences are evicted and
-the freed slot is re-prefilled from the queue without recompiling anything
-(prefill compiles once per prompt-length bucket; the decode chunk compiles
-once, period).
+time into *pages* of a shared KV pool, and decode together in a ``lax.scan``
+over ``decode_chunk`` steps — the hot path is one compiled function, no
+per-token Python dispatch.  Finished sequences release their pages and the
+queue refills the freed batch row without recompiling anything.
 
-Cache layout: every slot owns row ``i`` of a ``[slots, max_len]`` KV cache
-allocated up front via ``model.cache_specs`` — global-attention layers use a
-linear region written at ``pos``, sliding-window layers a ring written at
-``pos % window``, SSM layers a constant-size state.  This replaces the seed
-engine's ``grow_cache`` (a full-tree ``jnp.pad`` per generate call).
+Cache layout (``EngineConfig.cache_spec()``, ``CacheLayout.PAGED``): every
+attention layer owns a ``[n_pages, page_size, ...]`` page pool allocated up
+front via ``model.paged_cache_specs``; each live sequence holds a page
+*table* (``[pages_per_seq]`` int32, shared logically across all layers —
+pages are allocated in lockstep) mapping logical KV rows to pool pages.
+Page 0 is the reserved *trash page*: retired batch rows keep their table
+zeroed and ``pos = 0``, so the decode chunk's unconditional writes land
+somewhere harmless.  SSM state and cross-attention image KV have no
+sequence axis and stay slot-indexed ``[max_batch, ...]``.
+
+Prefix reuse (``EngineConfig.prefix_cache``): a radix tree over page-sized
+token chunks (``serving.paging.RadixCache``) shares full prompt pages
+between requests by refcount — a prefix hit of ``s`` tokens skips their
+recompute entirely: the engine gathers the cached rows and prefills only
+the suffix (``model.prefill(past=..., past_len=s)``), aligning the last
+query with the last key.  A partially-matching page is shared
+copy-on-write: the new request gets a fresh page, the donor's matched rows
+are device-copied, and the suffix overwrites the divergent tail.  Prefill
+compiles once per distinct ``(prefix_len, suffix_len)`` pair — exact
+lengths, no pad rows (the left-pad ``prefill_bucket`` machinery is gone,
+which also makes SSM/hybrid prefill exact by construction).
 
 Per-slot determinism: each request carries its own PRNG key and temperature,
 and every slot decodes at its own position, so a request's output is
@@ -36,9 +50,10 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.core import round_up
 from repro.models import model as M
 from repro.models.params import is_spec
+from repro.serving.config import CacheSpec, EngineConfig
+from repro.serving.paging import PagePool, PrefixMatch, RadixCache
 
 
 def bytes_tokenizer_encode(text: str, vocab: int) -> list[int]:
@@ -47,27 +62,6 @@ def bytes_tokenizer_encode(text: str, vocab: int) -> list[int]:
 
 def bytes_tokenizer_decode(tokens) -> str:
     return bytes(int(t) % 256 for t in tokens).decode("utf-8", errors="replace")
-
-
-def grow_cache(cfg: ArchConfig, caches, new_len: int):
-    """Legacy cache growth: pad every kv_seq dim to ``new_len``.  The engine
-    no longer uses this (slots are fixed-size); kept as the reference path for
-    tests and the serving benchmark's seed-style baseline."""
-    specs = M.cache_specs(cfg, 1, new_len)
-
-    def grow(spec, leaf):
-        if "kv_seq" not in spec.axes:
-            return leaf
-        axis = spec.axes.index("kv_seq")
-        target = spec.shape[axis]
-        pad = target - leaf.shape[axis]
-        if pad <= 0:
-            return leaf
-        widths = [(0, 0)] * leaf.ndim
-        widths[axis] = (0, pad)
-        return jnp.pad(leaf, widths)
-
-    return jax.tree.map(grow, specs, caches, is_leaf=lambda x: is_spec(x))
 
 
 # ---------------------------------------------------------------------------
@@ -113,10 +107,18 @@ class ServeStats:
     tokens_out: int = 0
     prefills: int = 0
     chunks: int = 0
+    peak_active: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_lookup_tokens: int = 0
 
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hit_tokens / self.prefix_lookup_tokens
+                if self.prefix_lookup_tokens else 0.0)
 
 
 @dataclass
@@ -126,6 +128,10 @@ class _Slot:
     first_token_s: float = 0.0
 
 
+_LEGACY_KWARGS = ("max_len", "max_slots", "prefill_bucket", "decode_chunk",
+                  "eos_id", "max_queue", "kernel_mode", "quant")
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -133,64 +139,83 @@ class _Slot:
 class Engine:
     """Continuous-batching engine over a fixed params pytree.
 
-    Parameters
-    ----------
-    max_slots:      concurrent sequences (the decode batch dimension)
-    max_len:        per-slot KV capacity; admission requires
-                    ``bucketed_prompt + max_new <= max_len``
-    prefill_bucket: prompts are left-padded to a multiple of this, bounding
-                    the number of prefill compilations.  Pad rows are dead:
-                    the per-slot ``start`` offset excludes them from prefill
-                    attention and decode validity and shifts RoPE so real
-                    tokens sit at positions 0..len-1 — outputs are invariant
-                    to the bucket size.  (Exception: SSM/hybrid layers scan
-                    pad tokens into their recurrent state — use
-                    ``prefill_bucket=1`` there for exact-length prompts.)
-    decode_chunk:   scan steps per compiled decode call (the scheduler syncs
-                    with the host — evict/admit — once per chunk)
-    eos_id:         optional stop token (checked inside the scan)
-    max_queue:      admission-control bound; ``submit`` refuses beyond it
-    kernel_mode:    override ``cfg.kernel_mode`` (reference | interpret |
-                    pallas) for the prefill and decode-chunk hot paths
-    quant:          override ``cfg.quant``; ``"w8a8"`` quantizes the GEMM
-                    weights once here (``model.quantize_params``) and serves
-                    prefill + decode through the packed int8 kernels
+    Construct with an :class:`~repro.serving.config.EngineConfig`::
+
+        eng = Engine(cfg, params, EngineConfig(max_batch=8, max_len=512,
+                                               page_size=64))
+
+    The pre-paging keyword spelling (``max_slots=``, ``prefill_bucket=``,
+    ...) still works through a ``DeprecationWarning`` shim: ``max_slots``
+    maps to ``max_batch``, ``prefill_bucket`` is ignored (prefill is
+    exact-length now), and the default page budget reproduces the legacy
+    ``max_slots * max_len`` row capacity.
     """
 
-    def __init__(self, cfg: ArchConfig, params, max_len: int = 512, *,
-                 max_slots: int = 8, prefill_bucket: int = 32,
-                 decode_chunk: int = 8, eos_id: int | None = None,
-                 max_queue: int = 1024, kernel_mode: str | None = None,
-                 quant: str | None = None):
-        if kernel_mode is not None:
-            cfg = cfg.with_(kernel_mode=kernel_mode)
-        if quant is not None:
-            cfg = cfg.with_(quant=quant)
+    def __init__(self, cfg: ArchConfig, params,
+                 config: EngineConfig | int | None = None, **legacy):
+        if isinstance(config, int):  # legacy positional: Engine(cfg, p, 512)
+            legacy["max_len"] = config
+            config = None
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either an EngineConfig or legacy "
+                                "keyword arguments, not both")
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"unknown Engine arguments: {sorted(unknown)}")
+            warnings.warn(
+                "Engine(max_len=..., max_slots=..., ...) is deprecated; pass "
+                "EngineConfig (max_slots -> max_batch; prefill_bucket is "
+                "gone — prefill is exact-length on the paged cache)",
+                DeprecationWarning, stacklevel=2)
+            legacy.pop("prefill_bucket", None)
+            legacy["max_batch"] = legacy.pop("max_slots", 8)
+            config = EngineConfig(**legacy)
+        if config is None:
+            config = EngineConfig()
+
+        if config.kernel_mode is not None:
+            cfg = cfg.with_(kernel_mode=config.kernel_mode)
+        if config.quant is not None:
+            cfg = cfg.with_(quant=config.quant)
         if cfg.quant == "w8a8":
             params = M.quantize_params(cfg, params)  # idempotent
         self.cfg, self.params = cfg, params
-        self.max_slots, self.max_len = max_slots, max_len
-        self.prefill_bucket = prefill_bucket
-        if prefill_bucket > 1 and any(sp.mixer == "ssm"
-                                      for sp in cfg.layer_specs()):
-            warnings.warn(
-                f"{cfg.name}: SSM layers scan left-pad tokens into their "
-                f"recurrent state, so outputs vary with prefill_bucket="
-                f"{prefill_bucket}; use prefill_bucket=1 for exact-length "
-                f"prompts", stacklevel=2)
-        self.decode_chunk = decode_chunk
-        self.eos_id = eos_id
-        self.max_queue = max_queue
+        self.config = config
+        self.cache_spec: CacheSpec = config.cache_spec()
+        self.decode_chunk = config.decode_chunk
+        self.eos_id = config.eos_id
+        self.max_queue = config.max_queue
+        self.max_batch = config.max_batch
+        self.max_len = config.max_len
         self.stats = ServeStats()
 
-        self._cache_specs = M.cache_specs(cfg, max_slots, max_len)
+        ps = config.page_size
+        self.page_size = ps
+        self.npp = self.cache_spec.pages_per_seq  # table width (pages/seq)
+        self.pool = PagePool(config.n_pages)
+        # Prefix reuse requires prefill to decompose over the prompt: pure
+        # attention (incl. sliding-window) qualifies; SSM mixers scan state
+        # across the whole prompt, cross-attn prefill depends on the image,
+        # and this MLA prefill recomputes absorbed latents — all excluded.
+        decomposable = (not cfg.use_mla and
+                        all(sp.mixer not in ("ssm", "cross")
+                            for sp in cfg.layer_specs()))
+        self.radix: RadixCache | None = (
+            RadixCache(ps, self.pool)
+            if (config.prefix_cache and decomposable) else None)
+
+        self._cache_specs = M.paged_cache_specs(cfg, self.max_batch,
+                                                config.n_pages, ps)
         self._caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
             self._cache_specs, is_leaf=is_spec)
-        B = max_slots
+        B = self.max_batch
+        self._pages = np.zeros((B, self.npp), np.int32)  # 0 == trash page
+        self._owned: list[list[int]] = [[] for _ in range(B)]  # page refs
         self._cur = np.zeros(B, np.int32)        # next input token per slot
-        self._pos = np.zeros(B, np.int32)        # its cache row
-        self._start = np.zeros(B, np.int32)      # first live row (pad offset)
+        self._pos = np.zeros(B, np.int32)        # its logical cache row
+        self._limit = np.zeros(B, np.int32)      # reserved rows (plen+max_new)
         self._remaining = np.zeros(B, np.int32)  # tokens still to emit
         self._temp = np.zeros(B, np.float32)
         self._keys = np.zeros((B, 2), np.uint32)
@@ -201,7 +226,8 @@ class Engine:
         self._next_rid = 0
 
         self._decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
-        self._prefill_fns: dict[int, Any] = {}
+        self._prefill_fns: dict[tuple[int, int], Any] = {}
+        self._copy_fn = jax.jit(self._copy_page, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # compiled pieces
@@ -220,19 +246,20 @@ class Engine:
         keys = jax.vmap(lambda k: jax.random.split(k, 2)[1])(keys)
         return nxt, keys
 
-    def _decode_chunk(self, params, caches, cur, pos, start, remaining, temp,
+    def _decode_chunk(self, params, caches, pages, cur, pos, remaining, temp,
                       keys):
         """``decode_chunk`` fused decode steps; emits [B, steps] tokens.
-        ``start`` holds each slot's left-pad offset (first live cache row) —
-        constant across the chunk — so decode attention never reads the pad
-        rows the prompt bucketing wrote."""
+        ``pages`` [B, npp] is constant across the chunk (each request's full
+        page need is reserved at admission); finished slots freeze — their
+        table is re-pointed at the trash page on retirement, so the chunk's
+        unconditional KV writes can never corrupt a reallocated page."""
         cfg = self.cfg
 
         def body(carry, _):
             caches, cur, pos, remaining, keys = carry
             active = remaining > 0
             logits, caches = M.decode_step(cfg, params, caches, cur[:, None],
-                                           pos, start=start)
+                                           pos, pages=pages)
             nxt, keys = self._sample(logits[:, -1], temp, keys)
             nxt = jnp.where(active, nxt, cur)  # freeze finished slots
             step = active.astype(jnp.int32)
@@ -247,62 +274,100 @@ class Engine:
             length=self.decode_chunk)
         return caches, cur, pos, remaining, keys, toks.T  # [B, steps]
 
-    def _write_slot(self, caches, small, slot):
-        """Copy a 1-sequence prefill cache into slot `slot` of the big cache,
-        zeroing the slot's tail (slot recycling = this overwrite)."""
+    def _copy_page(self, caches, src, dst):
+        """Device copy page ``src`` -> ``dst`` in every KV pool (the COW half
+        of a partial-page prefix share; the suffix prefill then overwrites
+        the divergent tail rows of ``dst``)."""
 
-        def wr(spec, big, sm):
-            b_ax = spec.axes.index("batch")
-            sm = sm[tuple(slice(0, min(a, b))
-                          for a, b in zip(sm.shape, big.shape))]
-            block_shape = tuple(1 if i == b_ax else d
-                                for i, d in enumerate(big.shape))
-            block = jnp.zeros(block_shape, big.dtype)
-            block = lax.dynamic_update_slice(block, sm.astype(big.dtype),
-                                             (0,) * big.ndim)
-            start = tuple(slot if i == b_ax else 0 for i in range(big.ndim))
-            return lax.dynamic_update_slice(big, block, start)
+        def cp(spec, pool):
+            if "kv_seq" not in spec.axes:
+                return pool
+            return pool.at[:, dst].set(pool[:, src])
 
-        return jax.tree.map(wr, self._cache_specs, caches, small,
+        return jax.tree.map(cp, self._cache_specs, caches, is_leaf=is_spec)
+
+    def _flat_rows(self, table, first: int, n: int):
+        """Pool-row indices of logical rows ``[first, first + n)``."""
+        j = jnp.arange(n, dtype=jnp.int32) + first
+        return table[j // self.page_size] * self.page_size + j % self.page_size
+
+    def _gather_past(self, caches, table, s: int):
+        """Dense per-layer [1, s, ...] KV of the cached prefix (rows 0..s-1
+        read through the page table) — the ``past`` tree for suffix prefill.
+        Only reached for prefix-decomposable (pure-attention) models, where
+        every cache leaf has a kv_seq axis."""
+        rows = self._flat_rows(table, 0, s)
+
+        def g(spec, pool):
+            assert "kv_seq" in spec.axes, spec.axes
+            R, P, ps = pool.shape[0], pool.shape[1], pool.shape[2]
+            flat = pool.reshape(R, P * ps, *pool.shape[3:])
+            return flat[:, rows][:, None]  # [R, 1, s, ...]
+
+        return jax.tree.map(g, self._cache_specs, caches, is_leaf=is_spec)
+
+    def _scatter_new(self, caches, small, table, slot, s: int, sb: int):
+        """Write a suffix prefill's outputs into the big cache: kv_seq leaves
+        scatter their ``sb`` new rows to logical rows ``[s, s+sb)`` through
+        the page table; stateful leaves (SSM state, cross image-KV) overwrite
+        batch row ``slot``."""
+        rows = self._flat_rows(table, s, sb)
+
+        def w(spec, pool, sm):
+            if "kv_seq" in spec.axes:
+                R, P, ps = pool.shape[0], pool.shape[1], pool.shape[2]
+                flat = pool.reshape(R, P * ps, *pool.shape[3:])
+                flat = flat.at[:, rows].set(sm[:, 0].astype(pool.dtype))
+                return flat.reshape(pool.shape)
+            return pool.at[:, slot].set(sm[:, 0].astype(pool.dtype))
+
+        return jax.tree.map(w, self._cache_specs, caches, small,
                             is_leaf=is_spec)
 
-    def _prefill_fn(self, plen: int):
-        """Jitted prefill+insert, one compilation per prompt-length bucket."""
-        if plen not in self._prefill_fns:
+    def _prefill_fn(self, s: int, sb: int):
+        """Jitted suffix-prefill + cache insert; one compilation per distinct
+        (prefix_len, suffix_len) pair — prompts are exact-length, no pad
+        rows."""
+        key = (s, sb)
+        if key not in self._prefill_fns:
             cfg = self.cfg
 
-            def fn(params, caches, tokens, slot, start, temp1, key):
+            def fn(params, caches, tokens, table, slot, temp1, rkey):
+                past = self._gather_past(caches, table, s) if s else None
                 logits, small = M.prefill(cfg, params, {"tokens": tokens},
-                                          start=start)
-                caches = self._write_slot(caches, small, slot)
+                                          past=past, past_len=s, full_kv=True)
+                caches = self._scatter_new(caches, small, table, slot, s, sb)
                 t0, keys1 = self._sample(logits[:, -1], temp1[None],
-                                         key[None])
+                                         rkey[None])
                 return caches, t0[0], keys1[0]
 
-            self._prefill_fns[plen] = jax.jit(fn, donate_argnums=(1,))
-        return self._prefill_fns[plen]
+            self._prefill_fns[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._prefill_fns[key]
 
     # ------------------------------------------------------------------
     # scheduling
     # ------------------------------------------------------------------
 
-    def padded_len(self, prompt_len: int) -> int:
-        return max(self.prefill_bucket,
-                   round_up(prompt_len, self.prefill_bucket))
+    def pages_needed(self, prompt_len: int, max_new: int) -> int:
+        return -(-(prompt_len + max_new) // self.page_size)
 
     def submit(self, prompt: list[int], max_new: int = 32,
                temperature: float = 0.0, seed: int = 0) -> int:
         """Admit a request; returns its rid.  Raises ``ValueError`` when the
-        request can never fit a slot and ``RuntimeError`` on queue overflow
-        (backpressure — callers should retry later)."""
+        request can never fit (rows or pages) and ``RuntimeError`` on queue
+        overflow (backpressure — callers should retry later)."""
         if not prompt:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        if self.padded_len(len(prompt)) + max_new > self.max_len:
+        if len(prompt) + max_new > self.max_len:
             raise ValueError(
-                f"request needs {self.padded_len(len(prompt)) + max_new} "
-                f"cache rows > max_len={self.max_len}")
+                f"request needs {len(prompt) + max_new} cache rows > "
+                f"max_len={self.max_len}")
+        if self.pages_needed(len(prompt), max_new) > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request needs {self.pages_needed(len(prompt), max_new)} "
+                f"pages > pool capacity {self.pool.n_pages - 1}")
         if len(self._queue) >= self.max_queue:
             raise RuntimeError("admission queue full")
         rid = self._next_rid
@@ -320,28 +385,70 @@ class Engine:
     def num_queued(self) -> int:
         return len(self._queue)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.radix.hit_rate if self.radix else 0.0
+
     def _admit(self):
-        """Prefill queued requests into free slots."""
-        for i in range(self.max_slots):
-            if not self._queue or self._slots[i] is not None:
-                continue
-            req = self._queue.popleft()
-            plen = self.padded_len(len(req.prompt))
-            start = plen - len(req.prompt)  # left-pad rows [0, start) are dead
-            toks = np.zeros((1, plen), np.int32)
-            toks[0, start:] = req.prompt  # left-pad
+        """Prefill queued requests into free batch rows.  FIFO with
+        head-of-line blocking: when the head request's page need cannot be
+        met even after radix eviction, admission stops until retirements
+        free pages (no starvation of large requests)."""
+        free_rows = [i for i in range(self.max_batch)
+                     if self._slots[i] is None]
+        while self._queue and free_rows:
+            req = self._queue[0]
+            plen = len(req.prompt)
+            need = self.pages_needed(plen, req.max_new)
+            if self.radix is not None:
+                ht, lt = self.radix.hit_tokens, self.radix.lookup_tokens
+                m = self.radix.match(req.prompt, max_match=plen - 1)
+            else:
+                m = PrefixMatch()
+            fresh_needed = need - len(m.full_pages)
+            if self.pool.num_free < fresh_needed and self.radix is not None:
+                self.radix.evict(fresh_needed)
+            if self.pool.num_free < fresh_needed:
+                if self.radix is not None:  # blocked: don't count the lookup
+                    self.radix.hit_tokens = ht
+                    self.radix.lookup_tokens = lt
+                break
+            self._queue.popleft()
+            i = free_rows.pop(0)
+            s = m.tokens  # cached prefix length (<= plen - 1)
+            shared = list(m.full_pages)
+            for pid in shared:
+                self.pool.incref(pid)
+            fresh = [self.pool.alloc() for _ in range(fresh_needed)]
+            assert all(p is not None for p in fresh)
+            table = np.zeros(self.npp, np.int32)
+            table[: len(shared)] = shared
+            table[len(shared): len(shared) + len(fresh)] = fresh
+            if m.partial is not None:  # copy-on-write share of a partial page
+                donor, _rows = m.partial
+                self._caches = self._copy_fn(self._caches, jnp.int32(donor),
+                                             jnp.int32(fresh[0]))
+
+            toks = np.asarray(req.prompt[s:], np.int32)[None]  # exact length
             key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))
             t0 = time.time()
-            self._caches, first, key1 = self._prefill_fn(plen)(
-                self.params, self._caches, jnp.asarray(toks), jnp.int32(i),
-                jnp.int32(start), jnp.float32(req.temperature), key)
+            self._caches, first, key1 = self._prefill_fn(s, plen - s)(
+                self.params, self._caches, jnp.asarray(toks),
+                jnp.asarray(table), jnp.int32(i),
+                jnp.float32(req.temperature), key)
             first = int(first)
             self.stats.prefill_s += time.time() - t0
             self.stats.prefills += 1
+            if self.radix is not None:  # publish full prompt pages for reuse
+                fp = plen // self.page_size
+                self.radix.insert(req.prompt[: fp * self.page_size],
+                                  [int(table[j]) for j in range(fp)])
             now = time.time()
             self._slots[i] = _Slot(req, emitted=[first], first_token_s=now)
+            self._pages[i] = table
+            self._owned[i] = shared + fresh
             self._cur[i], self._pos[i] = first, plen
-            self._start[i] = start
+            self._limit[i] = plen + req.max_new
             self._remaining[i] = req.max_new - 1
             self._temp[i] = req.temperature
             self._keys[i] = np.asarray(key1)
@@ -349,6 +456,7 @@ class Engine:
             if self._remaining[i] == 0 or first == self.eos_id:
                 self._remaining[i] = 0
                 self._retire(i, now)
+                free_rows.append(i)
 
     def _retire(self, i: int, now: float):
         s = self._slots[i]
@@ -356,36 +464,43 @@ class Engine:
             s.req.rid, s.req.prompt, s.emitted, s.req.arrival_s,
             s.first_token_s, now))
         self._slots[i] = None
+        for pid in self._owned[i]:
+            self.pool.decref(pid)  # radix-held pages survive at rc >= 1
+        self._owned[i] = []
+        self._pages[i] = 0  # trash page: frozen-row writes land harmlessly
+        self._pos[i] = 0
+        self._cur[i] = 0
 
     def _check_capacity(self):
-        """Refuse to decode a slot past its KV capacity.
+        """Refuse to decode a slot past its reserved rows.
 
-        Global-attention layers write cache row ``pos``; a write at
-        ``pos >= max_len`` is dropped by ``attn_decode`` (never clamped onto
-        the last row), so reaching this state means lost context — the
-        admission bound (``submit``) should have made it impossible.  Surface
-        it as an explicit length error instead of silently degrading.
+        Rows beyond the reservation would route to the trash page (never
+        corrupt another sequence), but reaching that state means silently
+        lost context — the admission bound (``submit``) should have made it
+        impossible, so surface it as an explicit length error.
         """
         steps = np.minimum(self._remaining, self.decode_chunk)
         for i, slot in enumerate(self._slots):
-            if slot is not None and self._pos[i] + steps[i] > self.max_len:
+            if slot is not None and self._pos[i] + steps[i] > self._limit[i]:
                 raise RuntimeError(
                     f"slot {i} (rid={slot.req.rid}): decoding {int(steps[i])} "
                     f"steps from pos={int(self._pos[i])} overruns KV capacity "
-                    f"max_len={self.max_len}; request length accounting is "
-                    f"inconsistent with admission control")
+                    f"{int(self._limit[i])} rows; request length accounting "
+                    f"is inconsistent with admission control")
 
     def step(self) -> list[RequestResult]:
-        """One scheduling iteration: admit into free slots, run one compiled
-        decode chunk, evict finished sequences.  Returns newly finished."""
+        """One scheduling iteration: admit into free batch rows, run one
+        compiled decode chunk, evict finished sequences.  Returns newly
+        finished."""
         self._admit()
+        self.stats.peak_active = max(self.stats.peak_active, self.num_active)
         if self.num_active:
             self._check_capacity()
             before = self._remaining.copy()
             t0 = time.time()
             (self._caches, cur, pos, remaining, keys, toks) = self._decode_fn(
-                self.params, self._caches, jnp.asarray(self._cur),
-                jnp.asarray(self._pos), jnp.asarray(self._start),
+                self.params, self._caches, jnp.asarray(self._pages),
+                jnp.asarray(self._cur), jnp.asarray(self._pos),
                 jnp.asarray(self._remaining), jnp.asarray(self._temp),
                 jnp.asarray(self._keys))
             toks = np.asarray(toks)
@@ -406,6 +521,9 @@ class Engine:
                 self.stats.tokens_out += len(take)
                 if self._remaining[i] == 0:
                     self._retire(i, now)
+        if self.radix is not None:
+            self.stats.prefix_hit_tokens = self.radix.hit_tokens
+            self.stats.prefix_lookup_tokens = self.radix.lookup_tokens
         out, self._finished = self._finished, []
         return out
 
@@ -439,4 +557,7 @@ class Engine:
         t_stats.tokens_out += self.stats.tokens_out
         t_stats.prefills += self.stats.prefills
         t_stats.chunks += self.stats.chunks
+        t_stats.peak_active = self.stats.peak_active
+        t_stats.prefix_hit_tokens = self.stats.prefix_hit_tokens
+        t_stats.prefix_lookup_tokens = self.stats.prefix_lookup_tokens
         return out, t_stats

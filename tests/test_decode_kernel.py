@@ -1,9 +1,11 @@
 """Flash-decode kernel validation: Pallas (interpret=True) vs the jnp oracle
 across cache layouts (linear/ring), GQA grouping, logit softcap, mismatched
-qk/v head dims (MLA latent decode), mixed per-slot positions and pad offsets,
+qk/v head dims (MLA latent decode), and mixed per-slot positions/validity
+bounds (``start``: sliding windows on linear/paged caches, drained slots),
 plus semantic tests that pin the oracle itself against full attention over
-the unrolled sequence (ring == sliding window; linear+start == left-pad
-exclusion) and the all-invalid-slot -> zeros contract."""
+the unrolled sequence (ring == sliding window; linear+start == lower-bound
+exclusion) and the all-invalid-slot -> zeros contract.  The paged layout's
+kernel/oracle parity lives in test_paging.py."""
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -78,24 +78,20 @@ def test_interpret_decode_matches_reference(edge):
     """Decode hot path obeys kernel_mode: interpret-mode ``decode_step``
     (flash-decode Pallas kernel through the interpreter) matches the jnp
     reference to <= 1e-4 logits on the edge config, stepping from the same
-    caches — including a left-padded prefill (live rows only)."""
+    caches (capacity pre-padded via ``prefill(cache_len=...)``)."""
     cfg, params, batch = edge
-    from repro.serving.engine import grow_cache
     toks = batch["tokens"]
-    start = jnp.int32(5)  # left-pad: rows [0, 5) are dead
-    padded = jnp.concatenate(
-        [jnp.zeros((1, 5), toks.dtype), toks[:, : -6]], axis=1)
-    plen = padded.shape[1]
-    _, caches = M.prefill(cfg, params, {"tokens": padded}, start=start)
-    caches = grow_cache(cfg, caches, plen + 5)
+    plen = toks.shape[1] - 3
+    _, caches = M.prefill(cfg, params, {"tokens": toks[:, :plen]},
+                          cache_len=toks.shape[1])
     cfg_i = cfg.with_(kernel_mode="interpret")
     for step in range(3):
         lg_ref, caches_ref = M.decode_step(
-            cfg, params, caches, toks[:, -6 + step: -5 + step],
-            jnp.int32(plen + step), start=start)
+            cfg, params, caches, toks[:, plen + step: plen + step + 1],
+            jnp.int32(plen + step))
         lg_i, caches_i = M.decode_step(
-            cfg_i, params, caches, toks[:, -6 + step: -5 + step],
-            jnp.int32(plen + step), start=start)
+            cfg_i, params, caches, toks[:, plen + step: plen + step + 1],
+            jnp.int32(plen + step))
         np.testing.assert_allclose(np.asarray(lg_i), np.asarray(lg_ref),
                                    atol=ATOL, err_msg=f"step {step}")
         caches = caches_ref
@@ -109,11 +105,9 @@ def test_interpret_decode_matches_reference_mla():
     cfg = reduce_config(get_config("minicpm3-4b"))
     assert cfg.use_mla
     params = M.init(cfg, jax.random.PRNGKey(0))
-    from repro.serving.engine import grow_cache
     toks = jax.random.randint(jax.random.PRNGKey(4), (2, 24), 0,
                               cfg.vocab_size)
-    _, caches = M.prefill(cfg, params, {"tokens": toks[:, :-1]})
-    caches = grow_cache(cfg, caches, 24)
+    _, caches = M.prefill(cfg, params, {"tokens": toks[:, :-1]}, cache_len=24)
     lg_ref, _ = M.decode_step(cfg, params, caches, toks[:, -1:],
                               jnp.int32(23))
     lg_i, _ = M.decode_step(cfg.with_(kernel_mode="interpret"), params,
@@ -156,12 +150,11 @@ def test_w8a8_forward_close_to_fp32(edge):
 def test_w8a8_prefill_decode(edge):
     """Quantized weights flow through prefill + the decode-step cache path."""
     cfg, params, batch = edge
-    from repro.serving.engine import grow_cache
     cfg_q = cfg.with_(quant="w8a8")
     qp = M.quantize_params(cfg_q, params)
     toks = batch["tokens"]
-    lg, caches = M.prefill(cfg_q, qp, {"tokens": toks[:, :-1]})
-    caches = grow_cache(cfg_q, caches, toks.shape[1])
+    lg, caches = M.prefill(cfg_q, qp, {"tokens": toks[:, :-1]},
+                           cache_len=toks.shape[1])
     lg2, _ = M.decode_step(cfg_q, qp, caches, toks[:, -1:],
                            jnp.int32(toks.shape[1] - 1))
     assert np.isfinite(np.asarray(lg2, np.float32)).all()

@@ -231,25 +231,25 @@ def test_attend_per_row_positions(chunk):
         assert np.all(np.asarray(got[b, :s]) == 0.0)
 
 
-def test_flash_attention_start_excludes_leftpad():
-    """Per-batch ``start``: keys below it never receive weight, matching the
-    oracle's mask — the prefill half of the left-pad pollution fix."""
-    B, H, S, d = 2, 4, 96, 32
-    q = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
-    k = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
-    v = jnp.asarray(RNG.randn(B, H, S, d) * 0.3, jnp.float32)
-    start = jnp.asarray([17, 0], jnp.int32)
-    got = flash_attention(q, k, v, causal=True, start=start, bq=32, bk=32,
-                          interpret=True)
-    want = ref.flash_attention_ref(q, k, v, causal=True, start=start)
+def test_flash_attention_suffix_alignment():
+    """Sq < Sk (suffix prefill over a cached prefix): the causal rule aligns
+    the last query with the last key, so query row i attends keys
+    ``kpos <= i + (Sk - Sq)`` — the kernel must match the oracle and a
+    padded-query solo run of the full sequence."""
+    B, H, Sq, Sk, d = 2, 4, 32, 96, 32
+    q = jnp.asarray(RNG.randn(B, H, Sq, d) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, H, Sk, d) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, H, Sk, d) * 0.3, jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-3, rtol=1e-2)
-    # row 0's queries before start see no keys -> zeros
-    assert np.all(np.asarray(got[0, :, :17]) == 0.0)
-    # and the live region equals a solo run of the unpadded sequence
-    solo = flash_attention(q[:1, :, 17:], k[:1, :, 17:], v[:1, :, 17:],
-                           causal=True, bq=32, bk=32, interpret=True)
-    np.testing.assert_allclose(np.asarray(got[0, :, 17:]), np.asarray(solo[0]),
+    # equivalently: the last Sq rows of a full-length self-attention whose
+    # first Sk - Sq queries are the prefix itself
+    qf = jnp.concatenate([k[:, :, : Sk - Sq], q], axis=2)
+    full = flash_attention(qf, k, v, causal=True, bq=32, bk=32,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, :, -Sq:]),
                                atol=2e-3, rtol=1e-2)
 
 

@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs import REGISTRY, get_config, reduce_config
 from repro.models import model as M
-from repro.serving.engine import grow_cache
 
 ARCHS = list(REGISTRY)
 
@@ -76,8 +75,7 @@ def test_prefill_decode_matches_forward(built, name):
     # prefill on S-1 tokens, then decode token S-1
     b2 = dict(batch)
     b2["tokens"] = batch["tokens"][:, : S - 1]
-    _, caches = M.prefill(cfg, params, b2)
-    caches = grow_cache(cfg, caches, S)
+    _, caches = M.prefill(cfg, params, b2, cache_len=S)
     step_logits, _ = M.decode_step(cfg, params, caches,
                                    batch["tokens"][:, S - 1:],
                                    jnp.int32(S - 1))
@@ -98,8 +96,7 @@ def test_multi_step_decode_consistency(built, name):
 
     b2 = dict(batch)
     b2["tokens"] = batch["tokens"][:, :S]
-    logits, caches = M.prefill(cfg, params, b2)
-    caches = grow_cache(cfg, caches, S + extra)
+    logits, caches = M.prefill(cfg, params, b2, cache_len=S + extra)
     np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
                                np.asarray(want[:, S - 1], np.float32),
                                atol=2e-2, rtol=1e-2)
@@ -121,8 +118,7 @@ def test_sliding_window_ring_cache_wraps():
     hidden, _, _ = M.forward_hidden(cfg, params, batch, mode="prefill")
     want = M.lm_logits(cfg, params, hidden)
     b2 = {"tokens": batch["tokens"][:, :S]}
-    logits, caches = M.prefill(cfg, params, b2)
-    caches = grow_cache(cfg, caches, S + extra)
+    logits, caches = M.prefill(cfg, params, b2, cache_len=S + extra)
     for i in range(extra):
         logits, caches = M.decode_step(cfg, params, caches,
                                        batch["tokens"][:, S + i: S + i + 1],

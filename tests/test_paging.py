@@ -1,0 +1,266 @@
+"""Paged-KV building blocks: PagePool alloc/free/refcount invariants, the
+radix prefix cache (match/insert/evict, COW on divergence, hit accounting),
+and paged flash-decode parity — the oracle's page-gather against the dense
+linear layout, and the Pallas paged kernel (interpret) against the oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.serving import PagePool, RadixCache
+
+RNG = np.random.RandomState(11)
+
+
+# ---------------------------------------------------------------------------
+# page pool
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_until_exhausted():
+    pool = PagePool(5)  # pages 1..4 usable, 0 is the trash page
+    assert pool.num_free == 4 and pool.num_used == 0
+    got = [pool.alloc() for _ in range(4)]
+    assert sorted(got) == [1, 2, 3, 4]  # trash page never handed out
+    assert all(pool.refcount(p) == 1 for p in got)
+    assert pool.alloc() is None  # exhausted -> None, not an exception
+    assert pool.num_free == 0 and pool.num_used == 4
+
+
+def test_pool_free_via_decref_and_reuse():
+    pool = PagePool(3)
+    a = pool.alloc()
+    b = pool.alloc()
+    pool.decref(a)
+    assert pool.num_free == 1
+    c = pool.alloc()
+    assert c == a  # freed page is reusable
+    assert pool.refcount(b) == 1 and pool.refcount(c) == 1
+
+
+def test_pool_refcount_sharing():
+    pool = PagePool(4)
+    p = pool.alloc()
+    pool.incref(p)  # second holder (e.g. the radix tree)
+    pool.incref(p)  # third
+    assert pool.refcount(p) == 3
+    pool.decref(p)
+    pool.decref(p)
+    assert pool.num_free == 2  # still held once: not freed
+    pool.decref(p)
+    assert pool.num_free == 3  # last ref -> back on the free list
+
+
+def test_pool_trash_page_pinned():
+    pool = PagePool(2)
+    assert pool.refcount(0) == 1  # pinned forever
+    with pytest.raises(AssertionError):
+        pool.decref(0)
+    with pytest.raises(AssertionError):
+        pool.incref(0)
+    with pytest.raises(ValueError):
+        PagePool(1)  # no usable pages
+
+
+def test_pool_double_free_is_detected():
+    pool = PagePool(3)
+    p = pool.alloc()
+    pool.decref(p)
+    with pytest.raises(AssertionError):
+        pool.decref(p)
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache
+# ---------------------------------------------------------------------------
+
+def _cache(ps=4, n_pages=32):
+    pool = PagePool(n_pages)
+    return RadixCache(ps, pool), pool
+
+
+def _insert_prompt(rc, pool, tokens):
+    """Simulate an admission: alloc a page per full chunk, insert."""
+    ps = rc.page_size
+    pages = [pool.alloc() for _ in range(len(tokens) // ps)]
+    rc.insert(tokens, pages)
+    return pages
+
+
+def test_radix_miss_then_full_hit():
+    rc, pool = _cache()
+    prompt = list(range(12))  # 3 full pages of 4
+    m = rc.match(prompt)
+    assert m.tokens == 0 and not m.full_pages and m.partial is None
+    pages = _insert_prompt(rc, pool, prompt)
+    assert all(pool.refcount(p) == 2 for p in pages)  # seq + tree
+    m = rc.match(prompt)
+    assert m.full_pages == pages and m.tokens == 12 and m.partial is None
+    # accounting: 0/12 then 12/12 matched
+    assert rc.lookup_tokens == 24 and rc.hit_tokens == 12
+    assert rc.hit_rate == 0.5
+
+
+def test_radix_max_match_caps_the_hit():
+    """Engines cap at plen - 1 so at least one token remains to prefill."""
+    rc, pool = _cache()
+    prompt = list(range(8))
+    _insert_prompt(rc, pool, prompt)
+    m = rc.match(prompt, max_match=7)
+    assert len(m.full_pages) == 1  # second page would need all 8 tokens
+    assert m.partial is not None and m.partial[1] == 3  # 3-row COW share
+    assert m.tokens == 7
+
+
+def test_radix_partial_page_cow_on_divergence():
+    """A prompt diverging inside a cached page shares it copy-on-write:
+    match returns the donor page + the number of identical leading rows."""
+    rc, pool = _cache()
+    donor_pages = _insert_prompt(rc, pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    m = rc.match([1, 2, 3, 4, 5, 6, 99, 100])  # diverges at row 2 of page 2
+    assert m.full_pages == donor_pages[:1]
+    assert m.partial == (donor_pages[1], 2)
+    assert m.tokens == 6
+    # divergence at row 0 of the first page: nothing shareable
+    m = rc.match([9, 9, 9, 9])
+    assert m.tokens == 0 and m.partial is None
+
+
+def test_radix_insert_existing_chunks_no_double_incref():
+    rc, pool = _cache()
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]
+    pages = _insert_prompt(rc, pool, prompt)
+    again = [pool.alloc(), pool.alloc()]
+    assert rc.insert(prompt, again) == 0  # all chunks already cached
+    assert all(pool.refcount(p) == 2 for p in pages)
+    assert all(pool.refcount(p) == 1 for p in again)  # untouched
+
+
+def test_radix_evict_lru_leaves_first():
+    rc, pool = _cache(ps=4, n_pages=6)  # 5 usable pages
+    a = _insert_prompt(rc, pool, [1, 2, 3, 4, 5, 6, 7, 8])  # chain a1 -> a2
+    b = _insert_prompt(rc, pool, [9, 9, 9, 9])
+    for p in a + b:
+        pool.decref(p)  # sequences retire; only the tree holds the pages
+    rc.match([1, 2, 3, 4, 5, 6, 7, 8])  # touch chain a: b becomes LRU
+    assert pool.num_free == 2
+    assert rc.evict(3) == 1  # b's leaf goes first
+    assert pool.refcount(b[0]) == 0 and pool.refcount(a[1]) == 1
+    # inner node a1 only becomes evictable after its leaf a2 goes
+    assert rc.evict(5) == 2
+    assert pool.num_free == 5
+
+
+def test_radix_evict_skips_referenced_pages():
+    rc, pool = _cache(ps=4, n_pages=4)
+    pages = _insert_prompt(rc, pool, [1, 2, 3, 4])  # rc == 2: seq still live
+    assert rc.evict(10) == 0  # nothing evictable
+    assert pool.refcount(pages[0]) == 2
+    pool.decref(pages[0])
+    assert rc.evict(10) == 1  # now only the tree held it
+    assert pool.num_free == 3
+
+
+def test_radix_clear_releases_tree_refs():
+    rc, pool = _cache()
+    pages = _insert_prompt(rc, pool, list(range(8)))
+    for p in pages:
+        pool.decref(p)
+    rc.clear()
+    assert pool.num_free == 31
+    assert rc.match(list(range(8))).tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode: oracle gather == dense linear; kernel == oracle
+# ---------------------------------------------------------------------------
+
+def _paged_fixture(B=3, H=4, K=2, P=9, ps=8, d=16, dv=None, seed=3):
+    """Page pools + tables + the equivalent dense [B, S, K, d] caches."""
+    rng = np.random.RandomState(seed)
+    dv = dv or d
+    npp = (P - 1) // B  # pages per sequence (page 0 reserved)
+    kp = rng.randn(P, ps, K, d).astype(np.float32) * 0.3
+    vp = rng.randn(P, ps, K, dv).astype(np.float32) * 0.3
+    # non-trivial tables: sequence b owns a scattered set of pages
+    perm = rng.permutation(np.arange(1, P))[: B * npp].reshape(B, npp)
+    kd = kp[perm].reshape(B, npp * ps, K, d)
+    vd = vp[perm].reshape(B, npp * ps, K, dv)
+    q = jnp.asarray(rng.randn(B, H, d) * 0.3, jnp.float32)
+    pos = jnp.asarray(rng.randint(0, npp * ps, B), jnp.int32)
+    return (q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(perm, jnp.int32),
+            jnp.asarray(kd), jnp.asarray(vd), pos)
+
+
+def test_paged_ref_equals_dense_linear():
+    """The page table is pure indirection: the oracle over (pools, table)
+    must equal the oracle over the densely gathered cache."""
+    q, kp, vp, tbl, kd, vd, pos = _paged_fixture()
+    want = ref.flash_decode_ref(q, kd, vd, pos, None, layout="linear")
+    got = ref.flash_decode_ref(q, kp, vp, pos, None, pages=tbl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("softcap,with_start", [(0.0, False), (25.0, True)])
+def test_paged_kernel_matches_oracle(softcap, with_start):
+    q, kp, vp, tbl, _, _, pos = _paged_fixture()
+    start = (jnp.minimum(pos, jnp.asarray([3, 0, 11], jnp.int32))
+             if with_start else None)
+    want = ref.flash_decode_ref(q, kp, vp, pos, start, pages=tbl,
+                                softcap=softcap)
+    got = flash_decode(q, kp, vp, pos, start, pages=tbl, softcap=softcap,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_paged_kernel_window_via_start():
+    """Sliding windows under paging express validity as start = pos - w + 1
+    over logical rows (no ring) — must equal the dense ring-free oracle
+    restricted to the window."""
+    q, kp, vp, tbl, kd, vd, pos = _paged_fixture(seed=5)
+    w = 10
+    start = jnp.maximum(pos - w + 1, 0)
+    got = flash_decode(q, kp, vp, pos, start, pages=tbl, interpret=True)
+    want = ref.flash_decode_ref(q, kd, vd, pos, start, layout="linear")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_paged_kernel_mla_fused_operand():
+    """MLA's dual-operand form through the paged path: one fused
+    [latent | rope] pool passed as both k and v with dv narrowing."""
+    B, H, P, ps, kvr, dr = 2, 8, 7, 8, 32, 16
+    rng = np.random.RandomState(9)
+    q = jnp.asarray(rng.randn(B, H, kvr + dr) * 0.3, jnp.float32)
+    kv = jnp.asarray(rng.randn(P, ps, 1, kvr + dr) * 0.3, jnp.float32)
+    tbl = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    pos = jnp.asarray([7, 20], jnp.int32)
+    got = flash_decode(q, kv, kv, pos, None, pages=tbl, scale=0.13, dv=kvr,
+                       interpret=True)
+    want = ref.flash_decode_ref(q, kv, kv, pos, None, pages=tbl, scale=0.13,
+                                dv=kvr)
+    assert got.shape == (B, H, kvr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_paged_kernel_empty_and_fresh_slots():
+    """Retired slots (table all trash-page zeros, pos=0, start>pos) return
+    exact zeros; a fresh slot attends exactly its single live row."""
+    B, H, K, P, ps, d = 2, 4, 2, 5, 8, 16
+    rng = np.random.RandomState(13)
+    q = jnp.asarray(rng.randn(B, H, d) * 0.3, jnp.float32)
+    kp = jnp.asarray(rng.randn(P, ps, K, d) * 0.3, jnp.float32)
+    vp = jnp.asarray(rng.randn(P, ps, K, d) * 0.3, jnp.float32)
+    tbl = jnp.asarray([[0, 0], [1, 2]], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    start = jnp.asarray([1, 0], jnp.int32)  # slot 0: start > pos -> empty
+    got = flash_decode(q, kp, vp, pos, start, pages=tbl, interpret=True)
+    assert np.all(np.asarray(got[0]) == 0.0)
+    G = H // K
+    want1 = np.asarray(vp[1, 0])  # [K, d]: page 1, row 0
+    np.testing.assert_allclose(np.asarray(got[1]).reshape(K, G, d),
+                               np.broadcast_to(want1[:, None], (K, G, d)),
+                               atol=2e-6)
