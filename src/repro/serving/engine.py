@@ -26,7 +26,9 @@ copy-on-write: the new request gets a fresh page, the donor's matched rows
 are device-copied, and the suffix overwrites the divergent tail.  Prefill
 compiles once per distinct ``(prefix_len, suffix_len)`` pair — exact
 lengths, no pad rows (the left-pad ``prefill_bucket`` machinery is gone,
-which also makes SSM/hybrid prefill exact by construction).
+which also makes SSM/hybrid prefill exact by construction) — with the
+compiled variants kept in an LRU cache bounded by
+``Engine.max_prefill_variants``.
 
 Per-slot determinism: each request carries its own PRNG key and temperature,
 and every slot decodes at its own position, so a request's output is
@@ -39,7 +41,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -151,6 +153,11 @@ class Engine:
     ``max_slots * max_len`` row capacity.
     """
 
+    #: Bound on cached suffix-prefill executables (one per distinct
+    #: ``(prefix_len, suffix_len)`` pair, LRU-evicted beyond this) — varied
+    #: prompt lengths must not accumulate XLA executables without limit.
+    max_prefill_variants: int = 32
+
     def __init__(self, cfg: ArchConfig, params,
                  config: EngineConfig | int | None = None, **legacy):
         if isinstance(config, int):  # legacy positional: Engine(cfg, p, 512)
@@ -226,7 +233,7 @@ class Engine:
         self._next_rid = 0
 
         self._decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
-        self._prefill_fns: dict[tuple[int, int], Any] = {}
+        self._prefill_fns: OrderedDict[tuple[int, int], Any] = OrderedDict()
         self._copy_fn = jax.jit(self._copy_page, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
@@ -327,12 +334,15 @@ class Engine:
     def _prefill_fn(self, s: int, sb: int):
         """Jitted suffix-prefill + cache insert; one compilation per distinct
         (prefix_len, suffix_len) pair — prompts are exact-length, no pad
-        rows."""
+        rows.  Varied traffic produces arbitrarily many distinct pairs, so
+        the cache keeps only the ``max_prefill_variants`` most recently used
+        executables and recompiles on demand beyond that."""
         key = (s, sb)
-        if key not in self._prefill_fns:
+        fn = self._prefill_fns.pop(key, None)
+        if fn is None:
             cfg = self.cfg
 
-            def fn(params, caches, tokens, table, slot, temp1, rkey):
+            def prefill(params, caches, tokens, table, slot, temp1, rkey):
                 past = self._gather_past(caches, table, s) if s else None
                 logits, small = M.prefill(cfg, params, {"tokens": tokens},
                                           past=past, past_len=s, full_kv=True)
@@ -341,8 +351,11 @@ class Engine:
                                          rkey[None])
                 return caches, t0[0], keys1[0]
 
-            self._prefill_fns[key] = jax.jit(fn, donate_argnums=(1,))
-        return self._prefill_fns[key]
+            fn = jax.jit(prefill, donate_argnums=(1,))
+        self._prefill_fns[key] = fn  # (re)insert as most recently used
+        while len(self._prefill_fns) > self.max_prefill_variants:
+            self._prefill_fns.popitem(last=False)
+        return fn
 
     # ------------------------------------------------------------------
     # scheduling
@@ -389,6 +402,19 @@ class Engine:
     def prefix_hit_rate(self) -> float:
         return self.radix.hit_rate if self.radix else 0.0
 
+    def _ensure_free_pages(self, fresh_needed: int) -> bool:
+        """True when the pool can supply ``fresh_needed`` pages, evicting
+        radix-cached pages only if eviction actually gets there — a request
+        that stays blocked must not cost the tree pages it cannot use."""
+        if self.pool.num_free >= fresh_needed:
+            return True
+        if self.radix is None:
+            return False
+        if self.pool.num_free + self.radix.num_evictable() < fresh_needed:
+            return False
+        self.radix.evict(fresh_needed)
+        return True
+
     def _admit(self):
         """Prefill queued requests into free batch rows.  FIFO with
         head-of-line blocking: when the head request's page need cannot be
@@ -406,9 +432,29 @@ class Engine:
             else:
                 m = PrefixMatch()
             fresh_needed = need - len(m.full_pages)
-            if self.pool.num_free < fresh_needed and self.radix is not None:
-                self.radix.evict(fresh_needed)
-            if self.pool.num_free < fresh_needed:
+            # Pin every matched page (and the COW donor) *before* eviction
+            # can run: tree-only pages (refcount 1) are legitimate LRU
+            # victims, and an unpinned match could be freed by the very
+            # evict() that makes room for its own suffix — the page table
+            # would then point at a page the pool hands to someone else.
+            pinned = list(m.full_pages)
+            if m.partial is not None:
+                pinned.append(m.partial[0])
+            for pid in pinned:
+                self.pool.incref(pid)
+            ok = self._ensure_free_pages(fresh_needed)
+            if not ok and m.partial is not None:
+                # The pinned donor may itself be the one page eviction is
+                # short of (a request sized to the whole pool); retry with
+                # the copy-on-write share dropped rather than deadlock.
+                self.pool.decref(pinned.pop())
+                self.radix.hit_tokens -= m.partial[1]
+                m.partial = None
+                m.tokens = len(m.full_pages) * self.page_size
+                ok = self._ensure_free_pages(fresh_needed)
+            if not ok:
+                for pid in pinned:
+                    self.pool.decref(pid)
                 if self.radix is not None:  # blocked: don't count the lookup
                     self.radix.hit_tokens = ht
                     self.radix.lookup_tokens = lt
@@ -416,9 +462,7 @@ class Engine:
             self._queue.popleft()
             i = free_rows.pop(0)
             s = m.tokens  # cached prefix length (<= plen - 1)
-            shared = list(m.full_pages)
-            for pid in shared:
-                self.pool.incref(pid)
+            shared = list(m.full_pages)  # pins transfer to slot ownership
             fresh = [self.pool.alloc() for _ in range(fresh_needed)]
             assert all(p is not None for p in fresh)
             table = np.zeros(self.npp, np.int32)
@@ -428,6 +472,7 @@ class Engine:
                 donor, _rows = m.partial
                 self._caches = self._copy_fn(self._caches, jnp.int32(donor),
                                              jnp.int32(fresh[0]))
+                self.pool.decref(donor)  # COW copy done: release the pin
 
             toks = np.asarray(req.prompt[s:], np.int32)[None]  # exact length
             key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))

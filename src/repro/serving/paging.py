@@ -196,6 +196,27 @@ class RadixCache:
             stack.extend(n.children.values())
         return out
 
+    def num_evictable(self) -> int:
+        """Pages :meth:`evict` could free right now: nodes whose page only
+        the tree holds (refcount 1) *and* whose whole subtree is likewise
+        tree-only — eviction proceeds leaf-inward, so an inner node is
+        unreachable while any descendant must stay.  Admission uses this to
+        decide whether evicting can actually satisfy a request before
+        giving up any cached pages."""
+
+        def rec(node: _Node) -> tuple[int, bool]:
+            total, subtree_ok = 0, True
+            for child in node.children.values():
+                cnt, ok = rec(child)
+                total += cnt
+                subtree_ok = subtree_ok and ok
+            if node is self.root:
+                return total, subtree_ok
+            ok = subtree_ok and self.pool.refcount(node.page) == 1
+            return total + (1 if ok else 0), ok
+
+        return rec(self.root)[0]
+
     def evict(self, need_pages: int) -> int:
         """LRU-evict unreferenced leaves until the pool has ``need_pages``
         free (or nothing more is evictable).  A page is evictable iff only

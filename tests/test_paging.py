@@ -161,6 +161,27 @@ def test_radix_evict_skips_referenced_pages():
     assert pool.num_free == 3
 
 
+def test_radix_num_evictable_tracks_refs_and_structure():
+    """num_evictable counts exactly what leaf-inward eviction can reach:
+    tree-only pages whose whole subtree is also tree-only."""
+    rc, pool = _cache(ps=4, n_pages=8)
+    a = _insert_prompt(rc, pool, [1, 2, 3, 4, 5, 6, 7, 8])  # chain a1 -> a2
+    b = _insert_prompt(rc, pool, [9, 9, 9, 9])
+    assert rc.num_evictable() == 0  # every page still sequence-held
+    pool.decref(b[0])
+    assert rc.num_evictable() == 1
+    pool.decref(a[1])  # leaf a2 tree-only, but inner a1 still held
+    assert rc.num_evictable() == 2
+    pool.decref(a[0])
+    assert rc.num_evictable() == 3
+    pool.incref(a[1])  # re-pin the leaf: a1 is unreachable again
+    assert rc.num_evictable() == 1
+    pool.decref(a[1])
+    n = rc.num_evictable()
+    assert rc.evict(10) == n == 3  # the count is exactly what evict frees
+    assert rc.num_evictable() == 0
+
+
 def test_radix_clear_releases_tree_refs():
     rc, pool = _cache()
     pages = _insert_prompt(rc, pool, list(range(8)))

@@ -255,6 +255,77 @@ def test_prefix_hit_shares_pages_and_outputs_match(olmo):
         assert seq[len(p):] == reference_greedy(cfg, params, p, 6)
 
 
+def test_matched_prefix_pages_survive_eviction_pressure(olmo):
+    """Regression: the pages a radix lookup matches must be pinned before
+    eviction runs.  Unpinned, a tree-only matched page (refcount 1) was a
+    legitimate LRU victim for the very evict() making room for the same
+    request — incref then hit a freed page (crash), or worse the page was
+    handed to another sequence.  Now the blocked request simply waits."""
+    cfg, params = olmo
+    eng = Engine(cfg, params, _econ(max_len=96, max_batch=2, n_pages=7))
+    rng = np.random.RandomState(7)
+    prefix = rng.randint(3, cfg.vocab_size, 32).tolist()
+    a = eng.submit(prefix, max_new=16)                # 3 pages
+    results = eng.run()                               # retires; 2 prompt
+    assert eng.pool.num_free == 4                     # pages stay cached
+    filler = rng.randint(3, cfg.vocab_size, 16).tolist()
+    c = eng.submit(filler, max_new=32)                # 3 pages: pool drained
+    results.extend(eng.step())
+    assert eng.num_active == 1 and eng.pool.num_free == 1
+    pb = prefix + rng.randint(3, cfg.vocab_size, 16).tolist()
+    b = eng.submit(pb, max_new=16)                    # 4 pages, 2 matched
+    results.extend(eng.step())
+    assert eng.num_queued == 1                        # blocked, not crashed
+    assert eng.pool.refcount(1) == 1                  # matched prefix pages
+    assert eng.pool.refcount(2) == 1                  # still radix-held
+    while eng.num_active or eng.num_queued:
+        results.extend(eng.step())
+    by_rid = {r.rid: r for r in results}
+    assert sorted(by_rid) == sorted([a, b, c])
+    assert by_rid[b].generated == reference_greedy(cfg, params, pb, 16)
+    for pid in range(1, eng.pool.n_pages):            # seq refs all released
+        assert eng.pool.refcount(pid) in (0, 1)
+
+
+def test_blocked_admission_does_not_evict_prefix_cache(olmo):
+    """Regression: when the head-of-line request stays blocked even after
+    eviction could run, admission must not evict at all — cached prefix
+    pages were being thrown away for a request that remained queued."""
+    cfg, params = olmo
+    eng = Engine(cfg, params, _econ(max_len=96, max_batch=2, n_pages=7))
+    rng = np.random.RandomState(8)
+    prefix = rng.randint(3, cfg.vocab_size, 32).tolist()
+    eng.submit(prefix, max_new=16)                    # 3 pages
+    results = eng.run()                               # tree keeps 2 pages
+    eng.submit(rng.randint(3, cfg.vocab_size, 16).tolist(), max_new=32)
+    results.extend(eng.step())                        # live: 3 pages
+    assert eng.pool.num_free == 1
+    pb = rng.randint(3, cfg.vocab_size, 32).tolist()  # no shared prefix
+    b = eng.submit(pb, max_new=32)                    # 4 pages, 0 matched
+    results.extend(eng.step())
+    assert eng.num_queued == 1                        # blocked: 1 free + 2
+    assert eng.pool.refcount(1) == 1                  # evictable < 4 needed,
+    assert eng.pool.refcount(2) == 1                  # so nothing evicted
+    while eng.num_active or eng.num_queued:           # retirement frees 2;
+        results.extend(eng.step())                    # now eviction helps
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[b].generated == reference_greedy(cfg, params, pb, 32)
+
+
+def test_prefill_compile_cache_is_bounded(olmo):
+    """The suffix-prefill jit cache LRU-evicts beyond max_prefill_variants
+    (unbounded growth under varied prompt lengths), and recompiling an
+    evicted variant stays correct."""
+    cfg, params = olmo
+    eng = Engine(cfg, params, _econ(max_batch=1))
+    eng.max_prefill_variants = 2
+    prompts = _prompts(cfg, ["a", "bb", "ccc", "dddd", "eee"])
+    out, _ = eng.generate(prompts, max_new=4)
+    assert len(eng._prefill_fns) <= 2
+    for p, seq in zip(prompts, out):
+        assert seq[len(p):] == reference_greedy(cfg, params, p, 4)
+
+
 def test_prefix_cache_auto_disabled_for_ssm():
     """SSM prefill is not prefix-decomposable: the engine must refuse to
     radix-share even when the config asks for it."""
