@@ -10,9 +10,17 @@ Workloads:
   prefix-cache hit rate and the max concurrent sequences each mode reaches
   (the paged+radix engine fits the whole batch where slot-equivalent
   allocation fits a fraction).
+- goodput under SLO: a Poisson stream of short requests with a 512+-token
+  prompt injected mid-stream, chunked prefill (``chunk_tokens=32``) vs
+  unchunked — TTFT p50/p99, inter-token-latency p99, and the fraction of
+  requests meeting ``--slo-ttft``/``--slo-itl``.  Unchunked, the long
+  prefill head-of-line-blocks every in-flight decode for its whole
+  duration (an ITL spike); chunked, it streams through the mixed step 32
+  tokens per tick and decodes keep flowing.
 
 ``--json PATH`` additionally dumps the headline numbers (tokens/s, prefix
-hit rate, concurrency at fixed memory) for CI to persist.
+hit rate, concurrency at fixed memory, goodput/TTFT/ITL chunked vs
+unchunked) for CI to persist.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--arch olmo-1b]
 """
@@ -147,7 +155,59 @@ def bench_prefix_reuse(cfg, params, n_req=8, prefix_len=512, suffix_len=8,
     return out
 
 
-def run(arch: str = "olmo-1b") -> tuple[list[str], dict]:
+def _pctl(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
+
+
+def bench_goodput(cfg, params, chunk_tokens, *, slo_ttft_s=2.0,
+                  slo_itl_s=0.25, rate=50.0, n_short=12, long_len=560,
+                  max_new=16, seed=3):
+    """Poisson stream of short requests with one ``long_len``-token prompt
+    injected mid-stream; measures what chunked prefill buys the *other*
+    requests: TTFT/ITL tails and SLO-goodput."""
+    rng = np.random.RandomState(seed)
+    shorts = [rng.randint(1, cfg.vocab_size, rng.randint(8, 40)).tolist()
+              for _ in range(n_short)]
+    long_prompt = rng.randint(1, cfg.vocab_size, long_len).tolist()
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=long_len + max_new, max_batch=8, page_size=64,
+        chunk_tokens=chunk_tokens, decode_chunk=4,
+        slo_ttft_s=slo_ttft_s, slo_itl_s=slo_itl_s))
+    # warm both tick shapes (compile): a long prefill and a short batch
+    eng.generate([long_prompt], max_new=2)
+    eng.generate(shorts[:4], max_new=4)
+
+    due = np.cumsum(rng.exponential(1.0 / rate, n_short)).tolist()
+    arrivals = sorted([(t, p) for t, p in zip(due, shorts)] +
+                      [(due[n_short // 3], long_prompt)])
+    t0, nxt, results = time.time(), 0, []
+    while nxt < len(arrivals) or eng.num_queued or eng.num_active:
+        now = time.time() - t0
+        while nxt < len(arrivals) and now >= arrivals[nxt][0]:
+            eng.submit(arrivals[nxt][1], max_new, seed=nxt)
+            nxt += 1
+        if not (eng.num_queued or eng.num_active):
+            time.sleep(min(0.01, max(0.0, arrivals[nxt][0] - now)))
+            continue
+        results.extend(eng.step())
+    wall = time.time() - t0
+
+    ttft = [r.ttft_s for r in results]
+    itl = [g for r in results for g in r.itl_s]
+    good = sum(1 for r in results
+               if r.ttft_s <= slo_ttft_s
+               and all(g <= slo_itl_s for g in r.itl_s))
+    toks = sum(len(r.generated) for r in results)
+    return dict(wall=wall, toks=toks, tput=toks / wall,
+                ttft_p50=_pctl(ttft, 0.5), ttft_p99=_pctl(ttft, 0.99),
+                itl_p99=_pctl(itl, 0.99),
+                goodput_frac=good / len(results),
+                goodput_req_s=good / wall)
+
+
+def run(arch: str = "olmo-1b", slo_ttft_s: float = 2.0,
+        slo_itl_s: float = 0.25) -> tuple[list[str], dict]:
     cfg = reduce_config(get_config(arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
     prompts = make_workload(cfg)
@@ -172,6 +232,21 @@ def run(arch: str = "olmo-1b") -> tuple[list[str], dict]:
                f"{s['tput']:.1f} tok/s p50={s['p50']:.2f}s p99={s['p99']:.2f}s "
                f"ttft_p50={s['ttft_p50']:.2f}s")
 
+    SLO_TTFT, SLO_ITL = slo_ttft_s, slo_itl_s
+    gp = {label: bench_goodput(cfg, params, ct, slo_ttft_s=SLO_TTFT,
+                               slo_itl_s=SLO_ITL)
+          for label, ct in (("chunked", 32), ("unchunked", None))}
+    out.append(f"goodput under SLO (ttft<={SLO_TTFT}s, itl<={SLO_ITL}s; "
+               f"Poisson shorts + one 560-token prompt mid-stream):")
+    for label, g in gp.items():
+        out.append(f"  {label}: goodput={g['goodput_frac']:.0%} "
+                   f"ttft_p50={g['ttft_p50']:.3f}s "
+                   f"ttft_p99={g['ttft_p99']:.3f}s "
+                   f"itl_p99={g['itl_p99']:.3f}s {g['tput']:.1f} tok/s")
+    out.append(f"derived: chunked prefill cuts inter-token p99 "
+               f"{gp['unchunked']['itl_p99'] / max(gp['chunked']['itl_p99'], 1e-9):.1f}x "
+               f"(the long prefill no longer head-of-line-blocks decodes)")
+
     pr = bench_prefix_reuse(cfg, params)
     out.append(f"prefix reuse (8 reqs sharing a 512-token prefix, "
                f"{pr['kv_rows_budget']} KV rows total): "
@@ -190,6 +265,16 @@ def run(arch: str = "olmo-1b") -> tuple[list[str], dict]:
         max_concurrent_radix=pr["radix"]["max_concurrent"],
         max_concurrent_no_share=pr["no_share"]["max_concurrent"],
         kv_rows_budget=pr["kv_rows_budget"],
+        slo_ttft_s=SLO_TTFT,
+        slo_itl_s=SLO_ITL,
+        chunked_ttft_p50_s=round(gp["chunked"]["ttft_p50"], 4),
+        chunked_ttft_p99_s=round(gp["chunked"]["ttft_p99"], 4),
+        chunked_itl_p99_s=round(gp["chunked"]["itl_p99"], 4),
+        chunked_goodput_frac=round(gp["chunked"]["goodput_frac"], 4),
+        unchunked_ttft_p50_s=round(gp["unchunked"]["ttft_p50"], 4),
+        unchunked_ttft_p99_s=round(gp["unchunked"]["ttft_p99"], 4),
+        unchunked_itl_p99_s=round(gp["unchunked"]["itl_p99"], 4),
+        unchunked_goodput_frac=round(gp["unchunked"]["goodput_frac"], 4),
     )
     return out, blob
 
@@ -199,8 +284,13 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--json", default=None,
                     help="also dump headline numbers to this JSON path")
+    ap.add_argument("--slo-ttft", type=float, default=2.0,
+                    help="time-to-first-token SLO (s) for goodput")
+    ap.add_argument("--slo-itl", type=float, default=0.25,
+                    help="inter-token-latency SLO (s) for goodput")
     args = ap.parse_args()
-    lines, blob = run(args.arch)
+    lines, blob = run(args.arch, slo_ttft_s=args.slo_ttft,
+                      slo_itl_s=args.slo_itl)
     print("\n".join(lines))
     if args.json:
         with open(args.json, "w") as f:

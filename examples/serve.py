@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--batch", type=int, default=2,
                     help="max concurrent sequences (decode batch)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked-prefill budget per tick (default: whole "
+                         "prompt in one chunk)")
     ap.add_argument("--kernel-mode", default=None,
                     choices=["reference", "interpret", "pallas"])
     ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
@@ -39,7 +42,7 @@ def main():
     params = M.init(cfg, jax.random.PRNGKey(0))
     # batch of 2 for 4 requests: watch the engine recycle pages mid-flight
     eng = Engine(cfg, params, EngineConfig(
-        max_len=256, max_batch=args.batch,
+        max_len=256, max_batch=args.batch, chunk_tokens=args.chunk_tokens,
         kernel_mode=args.kernel_mode, quant=args.quant))
 
     for i, req in enumerate(REQUESTS):

@@ -79,12 +79,156 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _fa_kernel_paged(qstart_ref, klen_ref, pages_ref, q_ref, k_ref, v_ref,
+                     o_ref, m_ref, l_ref, acc_ref, *, nk: int, bq: int,
+                     ps: int, window: int, softcap: float, scale: float):
+    """One (batch, head, q-block, page) grid step of chunked-prefill
+    attention over a paged past.
+
+    The query chunk's rows sit at absolute logical positions
+    ``qstart[b] + i`` and attend causally over logical rows
+    ``[0, klen[b])`` of the page pool — which include the chunk's own keys,
+    written through the page table before the kernel runs.  The page table
+    itself is consumed only by the BlockSpec index map (``pages_ref`` never
+    appears here): the kernel body works in logical rows, exactly like the
+    dense ``_fa_kernel``, with validity from the prefetched scalars instead
+    of a suffix-alignment offset."""
+    del pages_ref
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qs = qstart_ref[b]
+    kl = klen_ref[b]
+    # skip pages past the valid rows or past this q-block's causal horizon;
+    # their DMA was already elided by the index-map clip, never read them.
+    block_live = (ik * ps < kl) & (ik * ps <= qs + (iq + 1) * bq - 1)
+
+    @pl.when(block_live)
+    def _block():
+        q = q_ref[0, 0]       # [bq, d]
+        k = k_ref[0, :, 0]    # [ps, d]  (pool-native [P, ps, K, d] layout)
+        v = v_ref[0, :, 0]    # [ps, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = qs + iq * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ik * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos < kl) & (kpos <= qpos)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG * 0.5, p, 0.0)  # all-masked rows stay zero
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _store():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def _flash_attention_paged(q, k, v, pages, q_start, k_len, *, window: int,
+                           softcap: float, scale, bq: int, interpret: bool):
+    """q: [B, H, C, d] query chunk; k/v: page pools [P, ps, K, d];
+    pages: [B, npp] int32 -> [B, H, C, d].
+
+    Chunked-prefill attention: logical row ``r`` of slot ``b`` lives at pool
+    row ``(pages[b, r // ps], r % ps)``; query row ``i`` sits at logical
+    position ``q_start[b] + i`` and rows ``[0, k_len[b])`` are valid.  One
+    k-block is one page and the BlockSpec index map follows the
+    scalar-prefetched table (the ``flash_decode`` paged trick): dead pages —
+    beyond the valid rows or beyond the q-block's causal horizon — are
+    remapped to a live page index so the repeated-visit DMA is elided, and
+    their compute is skipped in-kernel."""
+    B, H, C, d = q.shape
+    ps, K = k.shape[1], k.shape[2]
+    npp = pages.shape[1]
+    G = H // K
+    scale = scale if scale is not None else d ** -0.5
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    k_len = jnp.broadcast_to(jnp.asarray(k_len, jnp.int32), (B,))
+    pages = jnp.asarray(pages, jnp.int32)
+    if k.dtype != q.dtype:  # serving pools share the compute dtype: no-op
+        k = k.astype(q.dtype)
+    if v.dtype != q.dtype:
+        v = v.astype(q.dtype)
+
+    bq_ = min(bq, round_up(C, 8))
+    Cp = round_up(C, bq_)
+    if Cp != C:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Cp - C), (0, 0)))
+    grid = (B, H, Cp // bq_, npp)
+
+    def q_map(b, h, iq, ik, *_):
+        return (b, h, iq, 0)
+
+    def kv_map(b, h, iq, ik, qstart_ref, klen_ref, pages_ref):
+        # dead logical pages revisit a live one (repeat index -> the DMA is
+        # elided); the kernel gates their compute via block_live
+        hi_k = (klen_ref[b] - 1) // ps
+        hi_c = (qstart_ref[b] + (iq + 1) * bq_ - 1) // ps
+        hi = jnp.clip(jnp.minimum(hi_k, hi_c), 0, npp - 1)
+        ik = jnp.minimum(ik, hi)
+        return (pages_ref[b, ik], 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # q_start, k_len, pages
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, d), q_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), F32),
+            pltpu.VMEM((bq_, 1), F32),
+            pltpu.VMEM((bq_, d), F32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel_paged, nk=npp, bq=bq_, ps=ps,
+                          window=window, softcap=softcap, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Cp, d), q.dtype),
+        interpret=interpret,
+    )(q_start, k_len, pages, q, k, v)
+    return out[:, :, :C]
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
-                    scale=None, softcap=0.0, interpret=False):
+                    scale=None, softcap=0.0, pages=None, q_start=None,
+                    k_len=None, interpret=False):
     """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] with H % K == 0 (GQA folded in the
     BlockSpec index map).  Arbitrary Sq/Sk: ragged shapes are padded up to
     the block grid and sliced back (padded keys are masked out in-kernel).
-    Fully-masked rows return zeros."""
+    Fully-masked rows return zeros.
+
+    ``pages`` switches to the *paged past* layout for chunked prefill: k/v
+    become page pools ``[n_pages, page_size, K, d]``, ``pages`` the [B, npp]
+    page table, and ``q_start``/``k_len`` [B] give the chunk's first query
+    position and the valid logical row count (see
+    :func:`_flash_attention_paged`).  Paged attention is causal by
+    definition — the chunk continues a causal prefix."""
+    if pages is not None:
+        assert causal, "paged chunk-prefill attention is causal by definition"
+        return _flash_attention_paged(q, k, v, pages, q_start, k_len,
+                                      window=window, softcap=softcap,
+                                      scale=scale, bq=bq, interpret=interpret)
     B, H, Sq, d = q.shape
     K = k.shape[1]
     Sk = k.shape[2]

@@ -47,10 +47,24 @@ def cgra_matmul_int8(a_q, b_q, a_scale, b_scale, mode: str = "reference",
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              pages=None, q_start=None, k_len=None,
               mode: str = "reference", bq=128, bk=128):
     """q: [B,H,Sq,d]; k/v: [B,K,Sk,d] (GQA: H % K == 0).  Ragged Sq/Sk ok;
     causal masking aligns the last query with the last key (``Sq < Sk`` is
-    the suffix-prefill pattern over a cached prefix)."""
+    the suffix-prefill pattern over a cached prefix).
+
+    ``pages`` ([B, npp] int32) switches to the chunked-prefill *paged past*
+    layout: k/v become page pools ``[n_pages, page_size, K, d]`` and
+    ``q_start``/``k_len`` [B] place the query chunk at absolute positions
+    ``q_start + i`` attending over logical rows ``[0, k_len)``."""
+    if pages is not None:
+        if mode == "reference":
+            return ref.flash_attention_paged_ref(q, k, v, pages, q_start,
+                                                 k_len, window=window,
+                                                 softcap=softcap)
+        return flash_attention(q, k, v, pages=pages, q_start=q_start,
+                               k_len=k_len, window=window, softcap=softcap,
+                               bq=bq, interpret=(mode == "interpret"))
     if mode == "reference":
         G = q.shape[1] // k.shape[1]
         kb = jnp.repeat(k, G, axis=1)

@@ -48,6 +48,52 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def flash_attention_paged_ref(q, k, v, pages, q_start, k_len, *, window=0,
+                              scale=None, softcap=0.0):
+    """Oracle for ``flash_attention(pages=...)``: a query *chunk* attending
+    over a paged past (chunked prefill).  q: [B,H,C,d]; k/v: page pools
+    [n_pages, page_size, K, d] (H % K == 0, GQA); pages: [B, npp] int32 page
+    tables; q_start/k_len: [B] int32 — query row ``i`` of slot ``b`` sits at
+    logical position ``q_start[b] + i`` and attends causally over logical
+    rows ``[0, k_len[b])`` (which include the chunk's own freshly-written
+    keys).  The oracle gathers each slot's pages into a dense
+    [B, npp * page_size, K, d] cache and applies the absolute-position
+    causal/window mask — the page table is pure indirection.  Query rows
+    past the chunk's valid length are the caller's padding; their output is
+    unspecified (the engine slices them off)."""
+    pages = jnp.asarray(pages, jnp.int32)
+    B, H, C, d = q.shape
+    ps, K = k.shape[1], k.shape[2]
+    npp = pages.shape[1]
+    G = H // K
+    S = npp * ps
+    scale = scale if scale is not None else d ** -0.5
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    k_len = jnp.broadcast_to(jnp.asarray(k_len, jnp.int32), (B,))
+    shared = v is k
+    kd = k[pages].reshape(B, S, K, k.shape[-1])
+    kb = jnp.repeat(kd, G, axis=2)  # [B,S,H,d]
+    if shared:
+        vb = kb
+    else:
+        vd = v[pages].reshape(B, S, K, v.shape[-1])
+        vb = jnp.repeat(vd, G, axis=2)
+    s = jnp.einsum("bhqd,bshd->bhqs", q, kb,
+                   preferred_element_type=F32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B,C]
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = (kpos[None, None, :] < k_len[:, None, None]) & \
+           (kpos[None, None, :] <= qpos[:, :, None])
+    if window:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None], p, 0.0)  # all-masked row -> zeros
+    return jnp.einsum("bhqs,bshd->bhqd", p.astype(vb.dtype), vb)
+
+
 def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
                      softcap=0.0, scale=None, dv=None, pages=None):
     """Oracle for ``flash_decode``: batched single-token decode over a

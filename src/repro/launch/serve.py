@@ -38,6 +38,11 @@ def main():
                     help="KV page-pool size (default: batch*max_len worth)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable radix prefix reuse")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked-prefill budget: at most this many prompt "
+                         "tokens per tick, run together with in-flight "
+                         "decodes in one mixed step (default: whole-suffix "
+                         "prefill)")
     ap.add_argument("--kernel-mode", default=None,
                     choices=["reference", "interpret", "pallas"],
                     help="route GEMMs/attention through the CGRA Pallas "
@@ -53,6 +58,7 @@ def main():
     eng = Engine(cfg, params, EngineConfig(
         max_len=args.max_len, max_batch=args.batch, page_size=args.page_size,
         n_pages=args.pages, prefix_cache=not args.no_prefix_cache,
+        chunk_tokens=args.chunk_tokens,
         kernel_mode=args.kernel_mode, quant=args.quant))
 
     rng = np.random.RandomState(0)

@@ -386,6 +386,72 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     return out, {"k": k, "v": v}
 
 
+def _page_rows_write(pool, new_rows, pages, pos0, n):
+    """Scatter a *chunk* of rows per sequence into a page pool.
+
+    pool: [P, ps, ...]; new_rows: [B, C, ...]; pages: [B, npp]; pos0/n: [B].
+    Chunk row ``i`` of sequence ``b`` is logical row ``pos0[b] + i`` and
+    lands at pool row ``(pages[b, r // ps], r % ps)``.  Rows at ``i >= n[b]``
+    (the chunk's padding) and rows whose page index would fall off the table
+    are dropped, never clamped — same contract as :func:`_page_row_write`."""
+    P, ps = pool.shape[0], pool.shape[1]
+    B, C = new_rows.shape[0], new_rows.shape[1]
+    npp = pages.shape[1]
+    r = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B, C]
+    ipage = r // ps
+    ok = (jnp.arange(C)[None] < n[:, None]) & (ipage < npp)
+    flat = jnp.where(
+        ok,
+        jnp.take_along_axis(pages, jnp.minimum(ipage, npp - 1), axis=1) * ps
+        + r % ps,
+        P * ps)  # out of range -> dropped by mode="drop"
+    pooled = pool.reshape(P * ps, *pool.shape[2:])
+    pooled = pooled.at[flat.reshape(-1)].set(
+        new_rows.reshape(B * C, *new_rows.shape[2:]).astype(pool.dtype),
+        mode="drop")
+    return pooled.reshape(pool.shape)
+
+
+def attn_chunk_prefill(cfg: ArchConfig, p: dict, cache: dict, x, positions, *,
+                       local: bool, pages, chunk_len):
+    """Chunked prefill over a paged past: one fixed-size prompt chunk.
+
+    x: [B, C, D] — a size-C chunk buffer holding ``chunk_len`` valid prompt
+    rows (the rest is padding); ``positions``: [C] or [B, C] absolute
+    positions (``past_len + arange(C)``); cache: page pools [P, ps, K, dh];
+    pages: [B, npp] page tables; ``chunk_len``: scalar or [B] int32.
+
+    Writes the chunk's post-RoPE KV straight through the page table (no
+    dense gather of the past — the cached prefix stays in its pages) and
+    attends the query chunk over logical rows ``[0, past_len + chunk_len)``
+    via the paged flash-attention layout.  Padding rows beyond ``chunk_len``
+    produce garbage outputs the caller must ignore (the engine only reads
+    the last valid row); their KV writes are dropped.  Returns
+    (out, updated page pools)."""
+    B, C = x.shape[0], x.shape[1]
+    q, k_new, v_new = _qkv(cfg, p, x, x)
+    theta = cfg.rope_theta if not local else 10_000.0
+    positions = jnp.asarray(positions, jnp.int32)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, C))
+    q = rope(q, positions, theta)
+    k_new = rope(k_new, positions, theta)
+    pages = jnp.asarray(pages, jnp.int32)
+    chunk_len = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (B,))
+    pos0 = positions[:, 0]
+    k = _page_rows_write(cache["k"], k_new, pages, pos0, chunk_len)
+    v = _page_rows_write(cache["v"], v_new, pages, pos0, chunk_len)
+    window = cfg.window_size if local else 0
+    o = kernel_attention(
+        q.transpose(0, 2, 1, 3), k, v, pages=pages, q_start=pos0,
+        k_len=pos0 + chunk_len, window=window, softcap=cfg.logit_softcap,
+        mode=cfg.kernel_mode)
+    o = o.transpose(0, 2, 1, 3)
+    o = constrain(o, ("batch", None, "heads", None))
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    return out, {"k": k, "v": v}
+
+
 def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool,
                 pages=None):
     """One-token decode.  x: [B,1,D]; pos: scalar int32 or [B] int32 (cache

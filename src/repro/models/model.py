@@ -243,7 +243,7 @@ def pad_cache_len(cfg: ArchConfig, caches, new_len: int,
 
 def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
                  img, mode: str, cache=None, pos=None, pages=None,
-                 full_kv: bool = False, attn_chunk: int = 0):
+                 full_kv: bool = False, attn_chunk: int = 0, chunk_len=None):
     """Returns (x, new_cache, aux).
 
     decode: ``cache`` is the layer's KV cache (slot-indexed, or a page pool
@@ -251,12 +251,18 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
     layer's *past* KV ({"k","v"} [B, s, K, dh], post-RoPE — a radix-cache
     prefix hit) and ``positions`` must already be offset by ``s``;
     ``full_kv`` keeps sliding-window layers' full linear KV (paged serving)
-    instead of the rolled ring."""
+    instead of the rolled ring.  chunk (chunked prefill): ``cache`` is the
+    layer's page *pools*, ``pages`` the [B, npp] tables, ``chunk_len`` the
+    valid rows in the chunk buffer — only prefix-decomposable mixers
+    (pure attention) support it; SSM/MLA/cross raise."""
     aux = jnp.zeros((), F32)
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
     local = spec.mixer == "attn_local"
     if spec.mixer == "ssm":
+        if mode == "chunk":
+            raise NotImplementedError("chunked prefill requires a prefix-"
+                                      "decomposable mixer; SSM state is not")
         if mode == "decode":
             m, new_cache = S.ssd_decode(cfg, p["mixer"], cache, h)
         elif mode == "prefill":
@@ -264,6 +270,9 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
         else:
             m = S.ssd_forward(cfg, p["mixer"], h)
     elif cfg.use_mla:
+        if mode == "chunk":
+            raise NotImplementedError("chunked prefill over the paged past "
+                                      "does not support MLA's fused cache")
         if mode == "decode":
             m, new_cache = L.mla_decode(cfg, p["mixer"], cache, h, pos,
                                         pages=pages)
@@ -273,6 +282,9 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
             m = L.mla_forward(cfg, p["mixer"], h, positions, attn_chunk)
     elif spec.mixer == "cross":
         mp = p["mixer"]
+        if mode == "chunk":
+            raise NotImplementedError("chunked prefill does not support "
+                                      "cross-attention image KV")
         if mode == "decode":
             m, sc = L.attn_decode(cfg, mp["self"], {"k": cache["k"], "v": cache["v"]},
                                   h, pos, local=False, pages=pages)
@@ -294,6 +306,11 @@ def _apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x, *, positions,
         if mode == "decode":
             m, new_cache = L.attn_decode(cfg, p["mixer"], cache, h, pos,
                                          local=local, pages=pages)
+        elif mode == "chunk":
+            m, new_cache = L.attn_chunk_prefill(cfg, p["mixer"], cache, h,
+                                                positions, local=local,
+                                                pages=pages,
+                                                chunk_len=chunk_len)
         elif mode == "prefill":
             m, new_cache = L.attn_prefill(cfg, p["mixer"], h, positions, local=local,
                                           attn_chunk=attn_chunk, past_kv=cache,
@@ -328,7 +345,8 @@ def _remat(cfg: ArchConfig, fn):
 
 def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
                  mode: str, caches=None, pos=None, pages=None,
-                 full_kv: bool = False, attn_chunk: int = 0, aux0=None):
+                 full_kv: bool = False, attn_chunk: int = 0, chunk_len=None,
+                 aux0=None):
     """Scan `stage.repeats` iterations of the layer group."""
     group = stage.group
 
@@ -342,7 +360,8 @@ def _apply_stage(cfg: ArchConfig, stage: Stage, sp, x, *, positions, img,
             xc, nc, a = _apply_layer(cfg, spec, lp[str(gi)], xc,
                                      positions=positions, img=img, mode=mode,
                                      cache=c_in, pos=pos, pages=pages,
-                                     full_kv=full_kv, attn_chunk=attn_chunk)
+                                     full_kv=full_kv, attn_chunk=attn_chunk,
+                                     chunk_len=chunk_len)
             if nc is not None:
                 new_caches[str(gi)] = nc
             aux = aux + a
@@ -410,8 +429,8 @@ def lm_logits(cfg: ArchConfig, params, hidden):
 # ---------------------------------------------------------------------------
 
 def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
-                   caches=None, pos=None, pages=None, past_len: int = 0,
-                   full_kv: bool = False, attn_chunk: int = 0,
+                   caches=None, pos=None, pages=None, past_len=0,
+                   full_kv: bool = False, attn_chunk: int = 0, chunk_len=None,
                    main_repeats: int | None = None):
     """Run the stack; returns (hidden, aux_loss, new_caches_per_stage).
 
@@ -422,7 +441,10 @@ def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
     prompt rows take positions ``past_len + arange(S)`` and attend over
     concat(past, new)); ``full_kv`` makes sliding-window layers return
     their full linear KV instead of a rolled ring (paged serving stores
-    every row and windows at decode time).
+    every row and windows at decode time).  chunk (chunked prefill):
+    ``caches`` is the paged pool tree, ``pages`` the tables, ``past_len``
+    (traced scalar ok) the rows already prefilled, ``chunk_len`` the valid
+    rows in the fixed-size chunk buffer.
     """
     x = embed_inputs(cfg, params, batch)
     x = constrain(x, ("batch", "seq", "embed"))
@@ -431,7 +453,8 @@ def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
     if mode == "decode":
         positions = None
     else:
-        positions = jnp.arange(seqlen, dtype=jnp.int32) + jnp.int32(past_len)
+        positions = jnp.arange(seqlen, dtype=jnp.int32) + \
+            jnp.asarray(past_len, jnp.int32)
     aux = jnp.zeros((), F32)
     new_caches = []
     for si, stage in enumerate(cfg.stages(main_repeats)):
@@ -440,10 +463,11 @@ def forward_hidden(cfg: ArchConfig, params, batch: dict, *, mode="train",
                                   positions=positions, img=img, mode=mode,
                                   caches=c, pos=pos, pages=pages,
                                   full_kv=full_kv, attn_chunk=attn_chunk,
-                                  aux0=aux)
+                                  chunk_len=chunk_len, aux0=aux)
         new_caches.append(ys)
     x = L.apply_norm(cfg, params["final_norm"], x)
-    return x, aux, (new_caches if mode in ("prefill", "decode") else None)
+    return x, aux, (new_caches if mode in ("prefill", "decode", "chunk")
+                    else None)
 
 
 def cross_entropy(cfg: ArchConfig, logits, labels):
@@ -502,3 +526,47 @@ def decode_step(cfg: ArchConfig, params, caches, token, pos, *, pages=None,
                                            main_repeats=main_repeats)
     logits = lm_logits(cfg, params, hidden)
     return logits, new_caches
+
+
+def chunk_step(cfg: ArchConfig, params, caches, tokens, pages, past_len,
+               chunk_len, *, main_repeats: int | None = None):
+    """One chunked-prefill step: run a fixed-size prompt chunk through the
+    paged cache.  tokens: [B, C] int32 chunk buffer (``chunk_len`` valid
+    rows, rest padding); pages: [B, npp] page tables; ``past_len`` rows of
+    this prompt are already in the pages (traced scalar ok).  The chunk's KV
+    is written straight through the page table — no dense gather of the
+    past — and the chunk attends over logical rows
+    ``[0, past_len + chunk_len)``.  Returns (last-valid-row logits
+    [B, 1, V], caches); the logits only mean anything when this chunk
+    finishes the prompt."""
+    batch = {"tokens": tokens}
+    hidden, _, new_caches = forward_hidden(cfg, params, batch, mode="chunk",
+                                           caches=caches, pages=pages,
+                                           past_len=past_len,
+                                           chunk_len=chunk_len,
+                                           main_repeats=main_repeats)
+    last = lax.dynamic_slice_in_dim(
+        hidden, jnp.asarray(chunk_len, jnp.int32) - 1, 1, axis=1)
+    logits = lm_logits(cfg, params, last)
+    return logits, new_caches
+
+
+def mixed_step(cfg: ArchConfig, params, caches, chunk_tokens, chunk_pages,
+               chunk_past_len, chunk_len, dec_token, dec_pos, dec_pages, *,
+               main_repeats: int | None = None):
+    """The unified mixed step: one prompt chunk plus one decode token per
+    slot, through shared layer application in a single compiled call.
+
+    The chunk pass runs first (its KV lands in its own pages), then the
+    decode pass runs over the updated pools — the two touch disjoint pages
+    (a slot is either prefilling or decoding), so ordering is a dataflow
+    convenience, not a semantic one.  Freeze a decode slot by pointing its
+    ``dec_pages`` row at the trash page and ignoring its logits.  Returns
+    (chunk_logits [Bc,1,V], dec_logits [B,1,V], caches)."""
+    chunk_logits, caches = chunk_step(cfg, params, caches, chunk_tokens,
+                                      chunk_pages, chunk_past_len, chunk_len,
+                                      main_repeats=main_repeats)
+    dec_logits, caches = decode_step(cfg, params, caches, dec_token, dec_pos,
+                                     pages=dec_pages,
+                                     main_repeats=main_repeats)
+    return chunk_logits, dec_logits, caches

@@ -1,6 +1,7 @@
 from repro.core.cache import CacheLayout  # noqa: F401
 from repro.serving.config import CacheSpec, EngineConfig  # noqa: F401
-from repro.serving.engine import (Engine, Request, RequestResult,  # noqa: F401
-                                  ServeStats, bytes_tokenizer_decode,
+from repro.serving.engine import (Engine, ModelRunner, Request,  # noqa: F401
+                                  RequestResult, Scheduler, ServeStats,
+                                  bytes_tokenizer_decode,
                                   bytes_tokenizer_encode)
 from repro.serving.paging import PagePool, PrefixMatch, RadixCache  # noqa: F401

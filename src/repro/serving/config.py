@@ -58,6 +58,17 @@ class EngineConfig:
                    disabled for architectures with SSM/cross-attention
                    mixers, whose prefill is not prefix-decomposable
     decode_chunk:  scan steps per compiled decode call
+    chunk_tokens:  chunked-prefill budget — at most this many prompt tokens
+                   per engine tick, run *together with* one decode step per
+                   in-flight sequence in a single compiled mixed step, so
+                   long prompts stream through without stalling decodes.
+                   ``None`` (default) prefills each prompt in one
+                   whole-suffix chunk (still through the mixed step on
+                   prefix-decomposable models — one compiled variant per
+                   power-of-two bucket, not per prompt length)
+    slo_ttft_s:    optional time-to-first-token SLO budget (seconds) — pure
+                   metadata for goodput reporting, no scheduling effect
+    slo_itl_s:     optional inter-token-latency SLO budget (seconds), ditto
     eos_id:        optional stop token (checked inside the scan)
     max_queue:     admission-control bound; ``submit`` refuses beyond it
     kernel_mode:   override ``cfg.kernel_mode`` (reference|interpret|pallas)
@@ -69,6 +80,9 @@ class EngineConfig:
     max_len: int = 512
     prefix_cache: bool = True
     decode_chunk: int = 8
+    chunk_tokens: int | None = None
+    slo_ttft_s: float | None = None
+    slo_itl_s: float | None = None
     eos_id: int | None = None
     max_queue: int = 1024
     kernel_mode: str | None = None
@@ -78,6 +92,9 @@ class EngineConfig:
         if self.page_size < 8 or self.page_size % 8:
             raise ValueError(f"page_size={self.page_size} must be a positive "
                              f"multiple of 8 (TPU sublane alignment)")
+        if self.chunk_tokens is not None and self.chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens={self.chunk_tokens} must be >= 1 "
+                             f"(or None for whole-suffix prefill)")
         if self.max_len % self.page_size:
             object.__setattr__(self, "max_len",
                                round_up(self.max_len, self.page_size))

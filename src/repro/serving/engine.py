@@ -1,10 +1,37 @@
 """Continuous-batching serving engine over a paged KV cache.
 
-Requests enter a bounded queue (admission control), get prefilled one at a
-time into *pages* of a shared KV pool, and decode together in a ``lax.scan``
-over ``decode_chunk`` steps — the hot path is one compiled function, no
-per-token Python dispatch.  Finished sequences release their pages and the
-queue refills the freed batch row without recompiling anything.
+The engine is split into a host-side :class:`Scheduler` (admission control,
+the slot state machine, chunk budgeting) and a device-side
+:class:`ModelRunner` (the compiled functions and the cache pytree), with
+:class:`Engine` as the public facade driving one *unified mixed step* per
+tick: up to ``chunk_tokens`` of prompt-chunk work from the prefilling slot
+plus one decode token per decoding slot, packed into a single compiled call.
+Decode latency stays flat while long prompts stream through in fixed-size
+chunks — prefill no longer head-of-line-blocks in-flight decodes.
+
+Slot state machine (``Scheduler``)::
+
+    QUEUED --admit--> PREFILLING(offset) --chunks--> DECODING --eos/limit-->
+    RETIRED
+
+Admission reserves the request's full page need up front and, on
+prefix-decomposable models (pure attention), starts the slot at
+``offset = radix prefix hit``; each tick the mixed step advances the oldest
+prefilling slot by up to ``chunk_tokens`` prompt rows, writing chunk KV
+straight through the page table (``model.chunk_step`` — no dense gather of
+the past).  When the chunk completes the prompt, the chunk logits' last
+valid row samples the first token and the slot flips to DECODING.  Ticks
+with no prefill work run a ``lax.scan`` of ``decode_chunk`` fused decode
+steps as before.
+
+Compiled-variant budget: the mixed step compiles once per chunk *buffer*
+size — with ``chunk_tokens`` set that is one variant total; unset, the
+whole suffix runs as a single chunk in a power-of-two-bucketed buffer
+(≤ log2(max_len) variants).  This replaces the per-``(prefix_len,
+suffix_len)`` prefill executable cache; the LRU bound
+(``Engine.max_prefill_variants``) is kept as a backstop and still governs
+the exact-length whole-prompt path used by non-decomposable mixers
+(SSM / MLA / cross-attention), which cannot chunk.
 
 Cache layout (``EngineConfig.cache_spec()``, ``CacheLayout.PAGED``): every
 attention layer owns a ``[n_pages, page_size, ...]`` page pool allocated up
@@ -13,22 +40,19 @@ front via ``model.paged_cache_specs``; each live sequence holds a page
 pages are allocated in lockstep) mapping logical KV rows to pool pages.
 Page 0 is the reserved *trash page*: retired batch rows keep their table
 zeroed and ``pos = 0``, so the decode chunk's unconditional writes land
-somewhere harmless.  SSM state and cross-attention image KV have no
-sequence axis and stay slot-indexed ``[max_batch, ...]``.
+somewhere harmless; the mixed step likewise zeroes the prefilling slot's
+row in the decode-side table.
 
 Prefix reuse (``EngineConfig.prefix_cache``): a radix tree over page-sized
 token chunks (``serving.paging.RadixCache``) shares full prompt pages
 between requests by refcount — a prefix hit of ``s`` tokens skips their
-recompute entirely: the engine gathers the cached rows and prefills only
-the suffix (``model.prefill(past=..., past_len=s)``), aligning the last
-query with the last key.  A partially-matching page is shared
+recompute entirely: the slot starts prefilling at ``offset = s`` and the
+chunks cover only the suffix.  A partially-matching page is shared
 copy-on-write: the new request gets a fresh page, the donor's matched rows
-are device-copied, and the suffix overwrites the divergent tail.  Prefill
-compiles once per distinct ``(prefix_len, suffix_len)`` pair — exact
-lengths, no pad rows (the left-pad ``prefill_bucket`` machinery is gone,
-which also makes SSM/hybrid prefill exact by construction) — with the
-compiled variants kept in an LRU cache bounded by
-``Engine.max_prefill_variants``.
+are device-copied, and the chunks overwrite the divergent tail.  A prompt's
+full pages are published to the tree when its prefill *completes* (pages
+must be fully written before they can be matched), and admission holds
+while a slot is prefilling so lookups never race an unpublished prefix.
 
 Per-slot determinism: each request carries its own PRNG key and temperature,
 and every slot decodes at its own position, so a request's output is
@@ -52,6 +76,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
+from repro.core import round_up
 from repro.models import model as M
 from repro.models.params import is_spec
 from repro.serving.config import CacheSpec, EngineConfig
@@ -88,6 +113,10 @@ class RequestResult:
     arrival_s: float
     first_token_s: float
     finish_s: float
+    #: wall-clock emission time of each generated token (tick granularity —
+    #: tokens emitted by the same compiled call share a timestamp); drives
+    #: inter-token-latency percentiles in the serving benchmark
+    token_times_s: list[float] = field(default_factory=list)
 
     @property
     def tokens(self) -> list[int]:
@@ -101,6 +130,12 @@ class RequestResult:
     def latency_s(self) -> float:
         return self.finish_s - self.arrival_s
 
+    @property
+    def itl_s(self) -> list[float]:
+        """Inter-token gaps (seconds) between consecutive emissions."""
+        t = self.token_times_s
+        return [b - a for a, b in zip(t, t[1:])]
+
 
 @dataclass
 class ServeStats:
@@ -109,6 +144,7 @@ class ServeStats:
     tokens_out: int = 0
     prefills: int = 0
     chunks: int = 0
+    mixed_steps: int = 0
     peak_active: int = 0
     prefix_hit_tokens: int = 0
     prefix_lookup_tokens: int = 0
@@ -123,11 +159,21 @@ class ServeStats:
                 if self.prefix_lookup_tokens else 0.0)
 
 
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+
+
 @dataclass
 class _Slot:
     req: Request
     emitted: list[int] = field(default_factory=list)
     first_token_s: float = 0.0
+    phase: str = DECODING
+    offset: int = 0        # prompt rows already in pages (incl. radix hit)
+    seq: int = 0           # admission order (FIFO chunk scheduling)
+    key: Any = None        # request PRNG key until the first sample commits
+    token_times: list[float] = field(default_factory=list)
 
 
 _LEGACY_KWARGS = ("max_len", "max_slots", "prefill_bucket", "decode_chunk",
@@ -135,114 +181,38 @@ _LEGACY_KWARGS = ("max_len", "max_slots", "prefill_bucket", "decode_chunk",
 
 
 # ---------------------------------------------------------------------------
-# Engine
+# ModelRunner: the compiled pieces + the cache pytree
 # ---------------------------------------------------------------------------
 
-class Engine:
-    """Continuous-batching engine over a fixed params pytree.
+class ModelRunner:
+    """Owns the device state (params, paged cache pools) and every compiled
+    function the engine calls: the fused decode chunk, the unified mixed
+    step (one compiled variant per chunk-buffer size), the exact-length
+    whole-prompt prefill for non-decomposable mixers, and the COW page copy.
+    Executables live in one LRU (`fns`) bounded by the caller-supplied
+    variant limit."""
 
-    Construct with an :class:`~repro.serving.config.EngineConfig`::
-
-        eng = Engine(cfg, params, EngineConfig(max_batch=8, max_len=512,
-                                               page_size=64))
-
-    The pre-paging keyword spelling (``max_slots=``, ``prefill_bucket=``,
-    ...) still works through a ``DeprecationWarning`` shim: ``max_slots``
-    maps to ``max_batch``, ``prefill_bucket`` is ignored (prefill is
-    exact-length now), and the default page budget reproduces the legacy
-    ``max_slots * max_len`` row capacity.
-    """
-
-    #: Bound on cached suffix-prefill executables (one per distinct
-    #: ``(prefix_len, suffix_len)`` pair, LRU-evicted beyond this) — varied
-    #: prompt lengths must not accumulate XLA executables without limit.
-    max_prefill_variants: int = 32
-
-    def __init__(self, cfg: ArchConfig, params,
-                 config: EngineConfig | int | None = None, **legacy):
-        if isinstance(config, int):  # legacy positional: Engine(cfg, p, 512)
-            legacy["max_len"] = config
-            config = None
-        if legacy:
-            if config is not None:
-                raise TypeError("pass either an EngineConfig or legacy "
-                                "keyword arguments, not both")
-            unknown = set(legacy) - set(_LEGACY_KWARGS)
-            if unknown:
-                raise TypeError(f"unknown Engine arguments: {sorted(unknown)}")
-            warnings.warn(
-                "Engine(max_len=..., max_slots=..., ...) is deprecated; pass "
-                "EngineConfig (max_slots -> max_batch; prefill_bucket is "
-                "gone — prefill is exact-length on the paged cache)",
-                DeprecationWarning, stacklevel=2)
-            legacy.pop("prefill_bucket", None)
-            legacy["max_batch"] = legacy.pop("max_slots", 8)
-            config = EngineConfig(**legacy)
-        if config is None:
-            config = EngineConfig()
-
-        if config.kernel_mode is not None:
-            cfg = cfg.with_(kernel_mode=config.kernel_mode)
-        if config.quant is not None:
-            cfg = cfg.with_(quant=config.quant)
-        if cfg.quant == "w8a8":
-            params = M.quantize_params(cfg, params)  # idempotent
+    def __init__(self, cfg: ArchConfig, params, config: EngineConfig):
         self.cfg, self.params = cfg, params
-        self.config = config
-        self.cache_spec: CacheSpec = config.cache_spec()
+        self.page_size = config.page_size
         self.decode_chunk = config.decode_chunk
         self.eos_id = config.eos_id
-        self.max_queue = config.max_queue
-        self.max_batch = config.max_batch
-        self.max_len = config.max_len
-        self.stats = ServeStats()
-
-        ps = config.page_size
-        self.page_size = ps
-        self.npp = self.cache_spec.pages_per_seq  # table width (pages/seq)
-        self.pool = PagePool(config.n_pages)
-        # Prefix reuse requires prefill to decompose over the prompt: pure
-        # attention (incl. sliding-window) qualifies; SSM mixers scan state
-        # across the whole prompt, cross-attn prefill depends on the image,
-        # and this MLA prefill recomputes absorbed latents — all excluded.
-        decomposable = (not cfg.use_mla and
-                        all(sp.mixer not in ("ssm", "cross")
-                            for sp in cfg.layer_specs()))
-        self.radix: RadixCache | None = (
-            RadixCache(ps, self.pool)
-            if (config.prefix_cache and decomposable) else None)
-
-        self._cache_specs = M.paged_cache_specs(cfg, self.max_batch,
-                                                config.n_pages, ps)
-        self._caches = jax.tree.map(
+        self.vocab = cfg.vocab_size
+        self.cache_specs = M.paged_cache_specs(cfg, config.max_batch,
+                                               config.n_pages,
+                                               config.page_size)
+        self.caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
-            self._cache_specs, is_leaf=is_spec)
-        B = self.max_batch
-        self._pages = np.zeros((B, self.npp), np.int32)  # 0 == trash page
-        self._owned: list[list[int]] = [[] for _ in range(B)]  # page refs
-        self._cur = np.zeros(B, np.int32)        # next input token per slot
-        self._pos = np.zeros(B, np.int32)        # its logical cache row
-        self._limit = np.zeros(B, np.int32)      # reserved rows (plen+max_new)
-        self._remaining = np.zeros(B, np.int32)  # tokens still to emit
-        self._temp = np.zeros(B, np.float32)
-        self._keys = np.zeros((B, 2), np.uint32)
+            self.cache_specs, is_leaf=is_spec)
+        self.decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
+        self.copy_fn = jax.jit(self._copy_page, donate_argnums=(0,))
+        self.fns: OrderedDict[tuple, Any] = OrderedDict()
 
-        self._queue: deque[Request] = deque()
-        self._slots: list[_Slot | None] = [None] * B
-        self._finished: list[RequestResult] = []
-        self._next_rid = 0
-
-        self._decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
-        self._prefill_fns: OrderedDict[tuple[int, int], Any] = OrderedDict()
-        self._copy_fn = jax.jit(self._copy_page, donate_argnums=(0,))
-
-    # ------------------------------------------------------------------
-    # compiled pieces
-    # ------------------------------------------------------------------
+    # -- sampling / decode ------------------------------------------------
 
     def _sample(self, logits, temp, keys):
         """Per-slot sampling.  logits: [B,Vp]; temp: [B]; keys: [B,2] u32."""
-        lf = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        lf = logits[:, : self.vocab].astype(jnp.float32)
         greedy = jnp.argmax(lf, -1).astype(jnp.int32)
 
         def one(key, lg, t):
@@ -253,13 +223,10 @@ class Engine:
         keys = jax.vmap(lambda k: jax.random.split(k, 2)[1])(keys)
         return nxt, keys
 
-    def _decode_chunk(self, params, caches, pages, cur, pos, remaining, temp,
-                      keys):
-        """``decode_chunk`` fused decode steps; emits [B, steps] tokens.
-        ``pages`` [B, npp] is constant across the chunk (each request's full
-        page need is reserved at admission); finished slots freeze — their
-        table is re-pointed at the trash page on retirement, so the chunk's
-        unconditional KV writes can never corrupt a reallocated page."""
+    def _dec_body(self, params, pages, temp):
+        """One decode step as a scan body — shared verbatim between the
+        decode-only chunk and the mixed step, so a token's math does not
+        depend on which tick shape produced it."""
         cfg = self.cfg
 
         def body(carry, _):
@@ -276,49 +243,64 @@ class Engine:
                                       remaining)
             return (caches, nxt, pos + step, remaining, keys), nxt
 
+        return body
+
+    def _decode_chunk(self, params, caches, pages, cur, pos, remaining, temp,
+                      keys):
+        """``decode_chunk`` fused decode steps; emits [B, steps] tokens.
+        ``pages`` [B, npp] is constant across the chunk (each request's full
+        page need is reserved at admission); finished slots freeze — their
+        table is re-pointed at the trash page on retirement, so the chunk's
+        unconditional KV writes can never corrupt a reallocated page."""
         (caches, cur, pos, remaining, keys), toks = lax.scan(
-            body, (caches, cur, pos, remaining, keys), None,
+            self._dec_body(params, pages, temp),
+            (caches, cur, pos, remaining, keys), None,
             length=self.decode_chunk)
         return caches, cur, pos, remaining, keys, toks.T  # [B, steps]
 
-    def _copy_page(self, caches, src, dst):
-        """Device copy page ``src`` -> ``dst`` in every KV pool (the COW half
-        of a partial-page prefix share; the suffix prefill then overwrites
-        the divergent tail rows of ``dst``)."""
+    # -- the unified mixed step -------------------------------------------
 
-        def cp(spec, pool):
-            if "kv_seq" not in spec.axes:
-                return pool
-            return pool.at[:, dst].set(pool[:, src])
+    def _mixed(self, params, caches, chunk_toks, chunk_pages, chunk_past,
+               chunk_len, chunk_temp, chunk_key, dec_pages, cur, pos,
+               remaining, temp, keys):
+        """One engine tick: a prompt chunk for the prefilling slot plus one
+        decode step for every decoding slot, in a single compiled call.
 
-        return jax.tree.map(cp, self._cache_specs, caches, is_leaf=is_spec)
+        chunk_toks [1, C] (``chunk_len`` valid rows at absolute positions
+        ``chunk_past + i``), chunk_pages [1, npp].  ``dec_pages`` is the
+        batch page table with the prefilling slot's row zeroed, so the
+        decode pass's unconditional write for that (frozen) row lands on the
+        trash page.  The chunk's sampled token/key only matter on the tick
+        the chunk completes the prompt — the host discards them otherwise."""
+        logits, caches = M.chunk_step(self.cfg, params, caches, chunk_toks,
+                                      chunk_pages, chunk_past, chunk_len)
+        tok0, key0 = self._sample(logits[:, -1], chunk_temp[None],
+                                  chunk_key[None])
+        (caches, cur, pos, remaining, keys), toks = lax.scan(
+            self._dec_body(params, dec_pages, temp),
+            (caches, cur, pos, remaining, keys), None, length=1)
+        return caches, tok0[0], key0[0], cur, pos, remaining, keys, toks.T
+
+    def mixed_fn(self, C: int, limit: int):
+        """The mixed-step executable for chunk-buffer size ``C`` (the only
+        shape degree of freedom — chunk offset/length are traced scalars)."""
+        return self._cached(("mixed", C),
+                            lambda: jax.jit(self._mixed, donate_argnums=(1,)),
+                            limit)
+
+    # -- exact-length whole-prompt prefill (non-decomposable mixers) ------
 
     def _flat_rows(self, table, first: int, n: int):
         """Pool-row indices of logical rows ``[first, first + n)``."""
         j = jnp.arange(n, dtype=jnp.int32) + first
         return table[j // self.page_size] * self.page_size + j % self.page_size
 
-    def _gather_past(self, caches, table, s: int):
-        """Dense per-layer [1, s, ...] KV of the cached prefix (rows 0..s-1
-        read through the page table) — the ``past`` tree for suffix prefill.
-        Only reached for prefix-decomposable (pure-attention) models, where
-        every cache leaf has a kv_seq axis."""
-        rows = self._flat_rows(table, 0, s)
-
-        def g(spec, pool):
-            assert "kv_seq" in spec.axes, spec.axes
-            R, P, ps = pool.shape[0], pool.shape[1], pool.shape[2]
-            flat = pool.reshape(R, P * ps, *pool.shape[3:])
-            return flat[:, rows][:, None]  # [R, 1, s, ...]
-
-        return jax.tree.map(g, self._cache_specs, caches, is_leaf=is_spec)
-
-    def _scatter_new(self, caches, small, table, slot, s: int, sb: int):
-        """Write a suffix prefill's outputs into the big cache: kv_seq leaves
-        scatter their ``sb`` new rows to logical rows ``[s, s+sb)`` through
-        the page table; stateful leaves (SSM state, cross image-KV) overwrite
-        batch row ``slot``."""
-        rows = self._flat_rows(table, s, sb)
+    def _scatter_new(self, caches, small, table, slot, n: int):
+        """Write a whole-prompt prefill's outputs into the big cache: kv_seq
+        leaves scatter their ``n`` rows to logical rows ``[0, n)`` through
+        the page table; stateful leaves (SSM state, cross image-KV)
+        overwrite batch row ``slot``."""
+        rows = self._flat_rows(table, 0, n)
 
         def w(spec, pool, sm):
             if "kv_seq" in spec.axes:
@@ -328,79 +310,127 @@ class Engine:
                 return flat.reshape(pool.shape)
             return pool.at[:, slot].set(sm[:, 0].astype(pool.dtype))
 
-        return jax.tree.map(w, self._cache_specs, caches, small,
+        return jax.tree.map(w, self.cache_specs, caches, small,
                             is_leaf=is_spec)
 
-    def _prefill_fn(self, s: int, sb: int):
-        """Jitted suffix-prefill + cache insert; one compilation per distinct
-        (prefix_len, suffix_len) pair — prompts are exact-length, no pad
-        rows.  Varied traffic produces arbitrarily many distinct pairs, so
-        the cache keeps only the ``max_prefill_variants`` most recently used
-        executables and recompiles on demand beyond that."""
-        key = (s, sb)
-        fn = self._prefill_fns.pop(key, None)
-        if fn is None:
+    def whole_prefill_fn(self, n: int, limit: int):
+        """Jitted exact-length prefill + cache insert for mixers whose
+        prefill is not prefix-decomposable (SSM / MLA / cross-attention —
+        they cannot run as chunks over a paged past).  One compilation per
+        prompt length, LRU-bounded like the mixed variants."""
+
+        def build():
             cfg = self.cfg
 
             def prefill(params, caches, tokens, table, slot, temp1, rkey):
-                past = self._gather_past(caches, table, s) if s else None
                 logits, small = M.prefill(cfg, params, {"tokens": tokens},
-                                          past=past, past_len=s, full_kv=True)
-                caches = self._scatter_new(caches, small, table, slot, s, sb)
-                t0, keys1 = self._sample(logits[:, -1], temp1[None],
-                                         rkey[None])
-                return caches, t0[0], keys1[0]
+                                          full_kv=True)
+                caches = self._scatter_new(caches, small, table, slot, n)
+                t0, key1 = self._sample(logits[:, -1], temp1[None],
+                                        rkey[None])
+                return caches, t0[0], key1[0]
 
-            fn = jax.jit(prefill, donate_argnums=(1,))
-        self._prefill_fns[key] = fn  # (re)insert as most recently used
-        while len(self._prefill_fns) > self.max_prefill_variants:
-            self._prefill_fns.popitem(last=False)
+            return jax.jit(prefill, donate_argnums=(1,))
+
+        return self._cached(("whole", n), build, limit)
+
+    def _cached(self, key, build, limit: int):
+        fn = self.fns.pop(key, None)
+        if fn is None:
+            fn = build()
+        self.fns[key] = fn  # (re)insert as most recently used
+        while len(self.fns) > limit:
+            self.fns.popitem(last=False)
         return fn
 
-    # ------------------------------------------------------------------
-    # scheduling
-    # ------------------------------------------------------------------
+    # -- COW page copy ----------------------------------------------------
+
+    def _copy_page(self, caches, src, dst):
+        """Device copy page ``src`` -> ``dst`` in every KV pool (the COW half
+        of a partial-page prefix share; the chunk prefill then overwrites
+        the divergent tail rows of ``dst``)."""
+
+        def cp(spec, pool):
+            if "kv_seq" not in spec.axes:
+                return pool
+            return pool.at[:, dst].set(pool[:, src])
+
+        return jax.tree.map(cp, self.cache_specs, caches, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: admission, chunk budgeting, slot state machine
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """Host-side request bookkeeping: the bounded admission queue, per-slot
+    numpy state (page tables, positions, budgets, PRNG keys), page/radix
+    accounting, and the QUEUED → PREFILLING → DECODING → RETIRED state
+    machine.  It decides *what* runs each tick (`next_chunk`); the
+    :class:`ModelRunner` decides *how*."""
+
+    def __init__(self, config: EngineConfig, decomposable: bool):
+        B = config.max_batch
+        self.config = config
+        self.page_size = config.page_size
+        self.max_batch = B
+        self.npp = config.cache_spec().pages_per_seq
+        self.pool = PagePool(config.n_pages)
+        # Chunked prefill (and prefix reuse) require prefill to decompose
+        # over the prompt: pure attention (incl. sliding-window) qualifies;
+        # SSM mixers scan state across the whole prompt, cross-attn prefill
+        # depends on the image, and this MLA prefill recomputes absorbed
+        # latents — all excluded, and served by exact whole-prompt prefill.
+        self.chunked = decomposable
+        self.radix: RadixCache | None = (
+            RadixCache(config.page_size, self.pool)
+            if (config.prefix_cache and decomposable) else None)
+
+        self.pages = np.zeros((B, self.npp), np.int32)  # 0 == trash page
+        self.owned: list[list[int]] = [[] for _ in range(B)]  # page refs
+        self.cur = np.zeros(B, np.int32)        # next input token per slot
+        self.pos = np.zeros(B, np.int32)        # its logical cache row
+        self.limit = np.zeros(B, np.int32)      # reserved rows (plen+max_new)
+        self.remaining = np.zeros(B, np.int32)  # tokens still to emit
+        self.temp = np.zeros(B, np.float32)
+        self.keys = np.zeros((B, 2), np.uint32)
+
+        self.queue: deque[Request] = deque()
+        self.slots: list[_Slot | None] = [None] * B
+        self.finished: list[RequestResult] = []
+        self._seq = 0
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
 
     def pages_needed(self, prompt_len: int, max_new: int) -> int:
         return -(-(prompt_len + max_new) // self.page_size)
 
-    def submit(self, prompt: list[int], max_new: int = 32,
-               temperature: float = 0.0, seed: int = 0) -> int:
-        """Admit a request; returns its rid.  Raises ``ValueError`` when the
-        request can never fit (rows or pages) and ``RuntimeError`` on queue
-        overflow (backpressure — callers should retry later)."""
-        if not prompt:
-            raise ValueError("empty prompt")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1")
-        if len(prompt) + max_new > self.max_len:
-            raise ValueError(
-                f"request needs {len(prompt) + max_new} cache rows > "
-                f"max_len={self.max_len}")
-        if self.pages_needed(len(prompt), max_new) > self.pool.n_pages - 1:
-            raise ValueError(
-                f"request needs {self.pages_needed(len(prompt), max_new)} "
-                f"pages > pool capacity {self.pool.n_pages - 1}")
-        if len(self._queue) >= self.max_queue:
-            raise RuntimeError("admission queue full")
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(Request(rid, list(prompt), max_new,
-                                   float(temperature), seed,
-                                   arrival_s=time.time()))
-        return rid
+    def prefilling_slot(self) -> int | None:
+        """Index of the slot currently streaming its prompt (at most one:
+        admission holds while a prefill is in flight)."""
+        cands = [i for i, s in enumerate(self.slots)
+                 if s is not None and s.phase == PREFILLING]
+        if not cands:
+            return None
+        return min(cands, key=lambda j: self.slots[j].seq)
 
-    @property
-    def num_active(self) -> int:
-        return sum(s is not None for s in self._slots)
-
-    @property
-    def num_queued(self) -> int:
-        return len(self._queue)
-
-    @property
-    def prefix_hit_rate(self) -> float:
-        return self.radix.hit_rate if self.radix else 0.0
+    def next_chunk(self) -> tuple[int, int] | None:
+        """(slot, n): the next prompt chunk to run — up to ``chunk_tokens``
+        rows of the oldest prefilling slot (the whole remaining suffix when
+        chunking is off)."""
+        i = self.prefilling_slot()
+        if i is None:
+            return None
+        slot = self.slots[i]
+        left = len(slot.req.prompt) - slot.offset
+        ct = self.config.chunk_tokens
+        return i, (left if ct is None else min(ct, left))
 
     def _ensure_free_pages(self, fresh_needed: int) -> bool:
         """True when the pool can supply ``fresh_needed`` pages, evicting
@@ -415,15 +445,22 @@ class Engine:
         self.radix.evict(fresh_needed)
         return True
 
-    def _admit(self):
-        """Prefill queued requests into free batch rows.  FIFO with
+    def admit(self, runner: ModelRunner, stats: ServeStats,
+              variant_limit: int):
+        """Move queued requests into free batch rows.  FIFO with
         head-of-line blocking: when the head request's page need cannot be
         met even after radix eviction, admission stops until retirements
-        free pages (no starvation of large requests)."""
+        free pages (no starvation of large requests).  On chunked
+        (prefix-decomposable) models a newly admitted slot enters
+        PREFILLING and admission holds until its prefill completes —
+        lookups must never match pages that are not fully written and
+        published; non-decomposable models prefill whole prompts inline."""
         free_rows = [i for i in range(self.max_batch)
-                     if self._slots[i] is None]
-        while self._queue and free_rows:
-            req = self._queue[0]
+                     if self.slots[i] is None]
+        while self.queue and free_rows:
+            if self.chunked and self.prefilling_slot() is not None:
+                break
+            req = self.queue[0]
             plen = len(req.prompt)
             need = self.pages_needed(plen, req.max_new)
             if self.radix is not None:
@@ -459,7 +496,7 @@ class Engine:
                     self.radix.hit_tokens = ht
                     self.radix.lookup_tokens = lt
                 break
-            self._queue.popleft()
+            self.queue.popleft()
             i = free_rows.pop(0)
             s = m.tokens  # cached prefix length (<= plen - 1)
             shared = list(m.full_pages)  # pins transfer to slot ownership
@@ -470,53 +507,94 @@ class Engine:
             table[len(shared): len(shared) + len(fresh)] = fresh
             if m.partial is not None:  # copy-on-write share of a partial page
                 donor, _rows = m.partial
-                self._caches = self._copy_fn(self._caches, jnp.int32(donor),
-                                             jnp.int32(fresh[0]))
+                runner.caches = runner.copy_fn(runner.caches,
+                                               jnp.int32(donor),
+                                               jnp.int32(fresh[0]))
                 self.pool.decref(donor)  # COW copy done: release the pin
 
-            toks = np.asarray(req.prompt[s:], np.int32)[None]  # exact length
             key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))
+            self.pages[i] = table
+            self.owned[i] = shared + fresh
+            self.limit[i] = plen + req.max_new
+            self.temp[i] = req.temperature
+            if self.chunked:
+                # slot enters PREFILLING at the radix offset; the engine's
+                # mixed ticks stream the suffix through in chunks
+                slot = _Slot(req, phase=PREFILLING, offset=s, seq=self._seq,
+                             key=np.asarray(key))
+                self._seq += 1
+                self.slots[i] = slot
+                self.cur[i] = self.pos[i] = self.remaining[i] = 0
+                break  # hold admission until this prefill completes
+            # non-decomposable: exact-length whole-prompt prefill, inline
+            assert s == 0 and m.partial is None
+            toks = np.asarray(req.prompt, np.int32)[None]
             t0 = time.time()
-            self._caches, first, key1 = self._prefill_fn(s, plen - s)(
-                self.params, self._caches, jnp.asarray(toks),
-                jnp.asarray(table), jnp.int32(i),
-                jnp.float32(req.temperature), key)
+            runner.caches, first, key1 = runner.whole_prefill_fn(
+                plen, variant_limit)(
+                    runner.params, runner.caches, jnp.asarray(toks),
+                    jnp.asarray(table), jnp.int32(i),
+                    jnp.float32(req.temperature), key)
             first = int(first)
-            self.stats.prefill_s += time.time() - t0
-            self.stats.prefills += 1
-            if self.radix is not None:  # publish full prompt pages for reuse
-                fp = plen // self.page_size
-                self.radix.insert(req.prompt[: fp * self.page_size],
-                                  [int(table[j]) for j in range(fp)])
+            stats.prefill_s += time.time() - t0
+            stats.prefills += 1
             now = time.time()
-            self._slots[i] = _Slot(req, emitted=[first], first_token_s=now)
-            self._pages[i] = table
-            self._owned[i] = shared + fresh
-            self._cur[i], self._pos[i] = first, plen
-            self._limit[i] = plen + req.max_new
-            self._remaining[i] = req.max_new - 1
-            self._temp[i] = req.temperature
-            self._keys[i] = np.asarray(key1)
-            self.stats.tokens_out += 1
-            if self._remaining[i] == 0 or first == self.eos_id:
-                self._remaining[i] = 0
-                self._retire(i, now)
+            self.slots[i] = _Slot(req, emitted=[first], first_token_s=now,
+                                  phase=DECODING, seq=self._seq,
+                                  token_times=[now])
+            self._seq += 1
+            self.cur[i], self.pos[i] = first, plen
+            self.remaining[i] = req.max_new - 1
+            self.keys[i] = np.asarray(key1)
+            stats.tokens_out += 1
+            if self.remaining[i] == 0 or first == self.config.eos_id:
+                self.remaining[i] = 0
+                self.retire(i, now)
                 free_rows.append(i)
 
-    def _retire(self, i: int, now: float):
-        s = self._slots[i]
-        self._finished.append(RequestResult(
-            s.req.rid, s.req.prompt, s.emitted, s.req.arrival_s,
-            s.first_token_s, now))
-        self._slots[i] = None
-        for pid in self._owned[i]:
-            self.pool.decref(pid)  # radix-held pages survive at rc >= 1
-        self._owned[i] = []
-        self._pages[i] = 0  # trash page: frozen-row writes land harmlessly
-        self._pos[i] = 0
-        self._cur[i] = 0
+    def commit_prefill(self, i: int, first: int, key1, now: float,
+                       stats: ServeStats) -> bool:
+        """A chunk just completed slot ``i``'s prompt: sample committed,
+        slot flips to DECODING (or retires immediately on eos / max_new=1).
+        Publishes the prompt's full pages to the radix tree — only now are
+        they fully written and safe to match.  Returns True if retired."""
+        slot = self.slots[i]
+        req = slot.req
+        plen = len(req.prompt)
+        if self.radix is not None:
+            fp = plen // self.page_size
+            self.radix.insert(req.prompt[: fp * self.page_size],
+                              [int(self.pages[i][j]) for j in range(fp)])
+        slot.phase = DECODING
+        slot.emitted = [first]
+        slot.first_token_s = now
+        slot.token_times = [now]
+        slot.key = None
+        self.cur[i], self.pos[i] = first, plen
+        self.remaining[i] = req.max_new - 1
+        self.keys[i] = np.asarray(key1)
+        stats.prefills += 1
+        stats.tokens_out += 1
+        if self.remaining[i] == 0 or first == self.config.eos_id:
+            self.remaining[i] = 0
+            self.retire(i, now)
+            return True
+        return False
 
-    def _check_capacity(self):
+    def retire(self, i: int, now: float):
+        s = self.slots[i]
+        self.finished.append(RequestResult(
+            s.req.rid, s.req.prompt, s.emitted, s.req.arrival_s,
+            s.first_token_s, now, token_times_s=list(s.token_times)))
+        self.slots[i] = None
+        for pid in self.owned[i]:
+            self.pool.decref(pid)  # radix-held pages survive at rc >= 1
+        self.owned[i] = []
+        self.pages[i] = 0  # trash page: frozen-row writes land harmlessly
+        self.pos[i] = 0
+        self.cur[i] = 0
+
+    def check_capacity(self, steps_bound: int):
         """Refuse to decode a slot past its reserved rows.
 
         Rows beyond the reservation would route to the trash page (never
@@ -524,58 +602,280 @@ class Engine:
         lost context — the admission bound (``submit``) should have made it
         impossible, so surface it as an explicit length error.
         """
-        steps = np.minimum(self._remaining, self.decode_chunk)
-        for i, slot in enumerate(self._slots):
-            if slot is not None and self._pos[i] + steps[i] > self._limit[i]:
+        steps = np.minimum(self.remaining, steps_bound)
+        for i, slot in enumerate(self.slots):
+            if (slot is not None and slot.phase == DECODING
+                    and self.pos[i] + steps[i] > self.limit[i]):
                 raise RuntimeError(
                     f"slot {i} (rid={slot.req.rid}): decoding {int(steps[i])} "
-                    f"steps from pos={int(self._pos[i])} overruns KV capacity "
-                    f"{int(self._limit[i])} rows; request length accounting "
+                    f"steps from pos={int(self.pos[i])} overruns KV capacity "
+                    f"{int(self.limit[i])} rows; request length accounting "
                     f"is inconsistent with admission control")
 
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching engine over a fixed params pytree.
+
+    Construct with an :class:`~repro.serving.config.EngineConfig`::
+
+        eng = Engine(cfg, params, EngineConfig(max_batch=8, max_len=512,
+                                               page_size=64,
+                                               chunk_tokens=32))
+
+    The pre-paging keyword spelling (``max_slots=``, ``prefill_bucket=``,
+    ...) still works through a ``DeprecationWarning`` shim: ``max_slots``
+    maps to ``max_batch``, ``prefill_bucket`` is ignored (prefill is
+    exact-length now), and the default page budget reproduces the legacy
+    ``max_slots * max_len`` row capacity.
+    """
+
+    #: Bound on cached executables in the runner's LRU: mixed-step variants
+    #: (one per chunk-buffer size — a handful at most) plus exact-length
+    #: whole-prompt prefills for non-decomposable mixers (one per prompt
+    #: length — the reason the bound exists).
+    max_prefill_variants: int = 32
+
+    def __init__(self, cfg: ArchConfig, params,
+                 config: EngineConfig | int | None = None, **legacy):
+        if isinstance(config, int):  # legacy positional: Engine(cfg, p, 512)
+            legacy["max_len"] = config
+            config = None
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either an EngineConfig or legacy "
+                                "keyword arguments, not both")
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"unknown Engine arguments: {sorted(unknown)}")
+            warnings.warn(
+                "Engine(max_len=..., max_slots=..., ...) is deprecated; pass "
+                "EngineConfig (max_slots -> max_batch; prefill_bucket is "
+                "gone — prefill is exact-length on the paged cache)",
+                DeprecationWarning, stacklevel=2)
+            legacy.pop("prefill_bucket", None)
+            legacy["max_batch"] = legacy.pop("max_slots", 8)
+            config = EngineConfig(**legacy)
+        if config is None:
+            config = EngineConfig()
+
+        if config.kernel_mode is not None:
+            cfg = cfg.with_(kernel_mode=config.kernel_mode)
+        if config.quant is not None:
+            cfg = cfg.with_(quant=config.quant)
+        if cfg.quant == "w8a8":
+            params = M.quantize_params(cfg, params)  # idempotent
+        self.cfg, self.params = cfg, params
+        self.config = config
+        self.cache_spec: CacheSpec = config.cache_spec()
+        self.decode_chunk = config.decode_chunk
+        self.chunk_tokens = config.chunk_tokens
+        self.eos_id = config.eos_id
+        self.max_queue = config.max_queue
+        self.max_batch = config.max_batch
+        self.max_len = config.max_len
+        self.page_size = config.page_size
+        self.npp = self.cache_spec.pages_per_seq
+        self.stats = ServeStats()
+
+        decomposable = (not cfg.use_mla and
+                        all(sp.mixer not in ("ssm", "cross")
+                            for sp in cfg.layer_specs()))
+        self.runner = ModelRunner(cfg, self.params, config)
+        self.sched = Scheduler(config, decomposable)
+        self._next_rid = 0
+
+    # -- state shared with the scheduler/runner (test-visible surface) ----
+
+    @property
+    def pool(self) -> PagePool:
+        return self.sched.pool
+
+    @property
+    def radix(self) -> RadixCache | None:
+        return self.sched.radix
+
+    @property
+    def num_active(self) -> int:
+        return self.sched.num_active
+
+    @property
+    def num_queued(self) -> int:
+        return self.sched.num_queued
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.radix.hit_rate if self.radix else 0.0
+
+    @property
+    def _caches(self):
+        return self.runner.caches
+
+    @property
+    def _prefill_fns(self):
+        return self.runner.fns
+
+    @property
+    def _pages(self):
+        return self.sched.pages
+
+    @property
+    def _remaining(self):
+        return self.sched.remaining
+
+    @property
+    def _slots(self):
+        return self.sched.slots
+
+    def pages_needed(self, prompt_len: int, max_new: int) -> int:
+        return self.sched.pages_needed(prompt_len, max_new)
+
+    # -- admission --------------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new: int = 32,
+               temperature: float = 0.0, seed: int = 0) -> int:
+        """Admit a request; returns its rid.  Raises ``ValueError`` on
+        malformed input or a request that can never fit (rows or pages) and
+        ``RuntimeError`` on queue overflow (backpressure — callers should
+        retry later)."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if not all(isinstance(t, (int, np.integer)) and 0 <= t < self.cfg.vocab_size
+                   for t in prompt):
+            raise ValueError(f"prompt tokens must be ints in "
+                             f"[0, {self.cfg.vocab_size})")
+        if not isinstance(max_new, (int, np.integer)) or max_new < 1:
+            raise ValueError(f"max_new={max_new!r} must be an int >= 1")
+        if temperature < 0.0:
+            raise ValueError(f"temperature={temperature} must be >= 0")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"request needs {len(prompt) + max_new} cache rows > "
+                f"max_len={self.max_len}")
+        if self.pages_needed(len(prompt), max_new) > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request needs {self.pages_needed(len(prompt), max_new)} "
+                f"pages > pool capacity {self.pool.n_pages - 1}")
+        if len(self.sched.queue) >= self.max_queue:
+            raise RuntimeError("admission queue full")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.queue.append(Request(rid, [int(t) for t in prompt],
+                                        int(max_new), float(temperature),
+                                        seed, arrival_s=time.time()))
+        return rid
+
+    # -- the tick ---------------------------------------------------------
+
+    def _chunk_buf(self, n: int) -> int:
+        """Static chunk-buffer size for an ``n``-token chunk: exactly
+        ``chunk_tokens`` when chunking is on (one compiled variant total);
+        otherwise the next power-of-two bucket (≤ log2(max_len) variants
+        across all prompt lengths — this replaces the per-(prefix, suffix)
+        executable cache)."""
+        if self.chunk_tokens is not None:
+            return self.chunk_tokens
+        C = 8
+        while C < n:
+            C *= 2
+        return min(C, round_up(self.max_len, 8))
+
+    def _mixed_tick(self, i: int, n: int):
+        """Run the unified mixed step: ``n`` prompt rows of prefilling slot
+        ``i`` plus one decode step for every decoding slot."""
+        sched, runner = self.sched, self.runner
+        slot = sched.slots[i]
+        C = self._chunk_buf(n)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :n] = slot.req.prompt[slot.offset: slot.offset + n]
+        dec_pages = sched.pages.copy()
+        dec_pages[i] = 0  # prefilling slot's frozen decode row -> trash page
+        sched.check_capacity(1)
+        before = sched.remaining.copy()
+        t0 = time.time()
+        (runner.caches, tok0, key1, cur, pos, remaining, keys, toks) = \
+            runner.mixed_fn(C, self.max_prefill_variants)(
+                runner.params, runner.caches, jnp.asarray(buf),
+                jnp.asarray(sched.pages[i: i + 1]), jnp.int32(slot.offset),
+                jnp.int32(n), jnp.float32(slot.req.temperature),
+                jnp.asarray(slot.key), jnp.asarray(dec_pages),
+                jnp.asarray(sched.cur), jnp.asarray(sched.pos),
+                jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
+                jnp.asarray(sched.keys))
+        toks = np.asarray(toks)
+        sched.cur, sched.pos = np.array(cur), np.array(pos)
+        sched.remaining, sched.keys = np.array(remaining), np.array(keys)
+        self.stats.prefill_s += time.time() - t0
+        self.stats.mixed_steps += 1
+        now = time.time()
+        self._emit(toks, before, now)
+        slot.offset += n
+        if slot.offset == len(slot.req.prompt):
+            sched.commit_prefill(i, int(tok0), key1, now, self.stats)
+
+    def _decode_tick(self):
+        """Run one fused decode chunk (no prefill work pending)."""
+        sched, runner = self.sched, self.runner
+        sched.check_capacity(self.decode_chunk)
+        before = sched.remaining.copy()
+        t0 = time.time()
+        (runner.caches, cur, pos, remaining, keys, toks) = runner.decode_fn(
+            runner.params, runner.caches, jnp.asarray(sched.pages),
+            jnp.asarray(sched.cur), jnp.asarray(sched.pos),
+            jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
+            jnp.asarray(sched.keys))
+        toks = np.asarray(toks)
+        sched.cur, sched.pos = np.array(cur), np.array(pos)
+        sched.remaining, sched.keys = np.array(remaining), np.array(keys)
+        self.stats.decode_s += time.time() - t0
+        self.stats.chunks += 1
+        self._emit(toks, before, time.time())
+
+    def _emit(self, toks, before, now: float):
+        """Credit decoded tokens to their slots and retire finished ones.
+        ``before`` (remaining at tick start) bounds each slot's share — a
+        slot that was prefilling or frozen contributes nothing."""
+        for i, slot in enumerate(self.sched.slots):
+            if slot is None or before[i] == 0:
+                continue
+            take = toks[i][: before[i]]
+            if self.eos_id is not None:
+                stop = np.nonzero(take == self.eos_id)[0]
+                if stop.size:
+                    take = take[: stop[0] + 1]
+            slot.emitted.extend(int(t) for t in take)
+            slot.token_times.extend(now for _ in take)
+            self.stats.tokens_out += len(take)
+            if self.sched.remaining[i] == 0:
+                self.sched.retire(i, now)
+
     def step(self) -> list[RequestResult]:
-        """One scheduling iteration: admit into free batch rows, run one
-        compiled decode chunk, evict finished sequences.  Returns newly
-        finished."""
-        self._admit()
+        """One scheduling iteration: admit, then run either the unified
+        mixed step (prompt chunk + one decode step each) or a fused
+        decode-only chunk.  Returns newly finished requests."""
+        sched = self.sched
+        sched.admit(self.runner, self.stats, self.max_prefill_variants)
         self.stats.peak_active = max(self.stats.peak_active, self.num_active)
-        if self.num_active:
-            self._check_capacity()
-            before = self._remaining.copy()
-            t0 = time.time()
-            (self._caches, cur, pos, remaining, keys, toks) = self._decode_fn(
-                self.params, self._caches, jnp.asarray(self._pages),
-                jnp.asarray(self._cur), jnp.asarray(self._pos),
-                jnp.asarray(self._remaining), jnp.asarray(self._temp),
-                jnp.asarray(self._keys))
-            toks = np.asarray(toks)
-            self._cur, self._pos = np.array(cur), np.array(pos)
-            self._remaining, self._keys = np.array(remaining), np.array(keys)
-            self.stats.decode_s += time.time() - t0
-            self.stats.chunks += 1
-            now = time.time()
-            for i, slot in enumerate(self._slots):
-                if slot is None:
-                    continue
-                take = toks[i][: before[i]]
-                if self.eos_id is not None:
-                    stop = np.nonzero(take == self.eos_id)[0]
-                    if stop.size:
-                        take = take[: stop[0] + 1]
-                slot.emitted.extend(int(t) for t in take)
-                self.stats.tokens_out += len(take)
-                if self._remaining[i] == 0:
-                    self._retire(i, now)
+        nc = sched.next_chunk()
+        if nc is not None:
+            self._mixed_tick(*nc)
+        elif self.num_active:
+            self._decode_tick()
         if self.radix is not None:
             self.stats.prefix_hit_tokens = self.radix.hit_tokens
             self.stats.prefix_lookup_tokens = self.radix.lookup_tokens
-        out, self._finished = self._finished, []
+        out, sched.finished = sched.finished, []
         return out
 
     def run(self) -> list[RequestResult]:
         """Drive ``step`` until queue and slots drain; returns all results."""
         results = []
-        while self._queue or self.num_active:
+        while self.sched.queue or self.num_active:
             results.extend(self.step())
         return results
 
@@ -592,7 +892,8 @@ class Engine:
                              decode_s=-self.stats.decode_s,
                              tokens_out=-self.stats.tokens_out,
                              prefills=-self.stats.prefills,
-                             chunks=-self.stats.chunks)
+                             chunks=-self.stats.chunks,
+                             mixed_steps=-self.stats.mixed_steps)
         rids = [self.submit(p, max_new, temperature, seed=seed * 1000003 + i)
                 for i, p in enumerate(prompts)]
         by_rid = {r.rid: r for r in self.run()}
@@ -602,6 +903,7 @@ class Engine:
         t_stats.tokens_out += self.stats.tokens_out
         t_stats.prefills += self.stats.prefills
         t_stats.chunks += self.stats.chunks
+        t_stats.mixed_steps += self.stats.mixed_steps
         t_stats.peak_active = self.stats.peak_active
         t_stats.prefix_hit_tokens = self.stats.prefix_hit_tokens
         t_stats.prefix_lookup_tokens = self.stats.prefix_lookup_tokens

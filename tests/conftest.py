@@ -1,0 +1,20 @@
+"""Free compiled executables between test modules.
+
+The whole tier-1 suite runs in one process and XLA:CPU never unloads
+jitted code, so compiled executables accumulate across modules until a
+late compilation crashes the JIT (observed as a deterministic segfault in
+``backend_compile`` once enough modules have run).  Collecting dead
+engines/functions and clearing JAX's caches at each module boundary keeps
+the live-code footprint bounded by the largest module instead of the
+whole suite."""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    gc.collect()
+    jax.clear_caches()
