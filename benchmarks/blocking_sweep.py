@@ -29,7 +29,6 @@ def run() -> list[str]:
     }.items():
         bm, bk, bn = select_block_shapes(m, k, n)
         vmem = (2 * (bm * bk + bk * bn) * 2 + bm * bn * 4) // 1024
-        naive = 2.0  # words touched per MAC without blocking
         reuse = (bm * bn * bk) / ((bm * bk + bk * bn))  # MACs per word loaded
         out.append(f"{name},{m},{k},{n},{bm},{bk},{bn},{vmem},{reuse:.0f}")
     return out

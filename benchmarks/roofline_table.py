@@ -10,7 +10,6 @@ def load(mesh: str, tag: str | None = None) -> list[dict]:
     rows = []
     for f in sorted(glob.glob(os.path.join(OUT, mesh, "*.json"))):
         name = os.path.basename(f)[:-5]
-        is_tagged = "--" in name.split("--", 2)[-1] if name.count("--") >= 2 else False
         if tag is None and name.count("--") >= 2:
             continue
         if tag is not None and not name.endswith(f"--{tag}"):

@@ -12,7 +12,6 @@ the deployment shape the paper's accelerator targets.
     PYTHONPATH=src python examples/edge_inference.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

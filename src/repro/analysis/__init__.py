@@ -1,0 +1,21 @@
+"""Static kernel-contract & config-rot checker for the serving stack.
+
+``python -m repro.analysis --strict`` traces every shipped config through
+the real serving entry points and proves the Pallas BlockSpec contracts —
+see DESIGN.md §8 for the rule catalogue and ``repro.analysis.findings.RULES``
+for the machine-readable list."""
+from repro.analysis.bounds import check_kernel_spec
+from repro.analysis.donation import check_donation
+from repro.analysis.findings import RULES, Finding, Report
+from repro.analysis.jaxpr_lints import (check_logits_dtype, iter_jaxprs,
+                                        lint_jaxpr)
+from repro.analysis.runner import (MODES, QUANTS, analysis_config, check_cell,
+                                   check_kernels, check_paging, run_analysis)
+
+__all__ = [
+    "RULES", "Finding", "Report",
+    "check_kernel_spec", "check_donation", "check_logits_dtype",
+    "iter_jaxprs", "lint_jaxpr",
+    "MODES", "QUANTS", "analysis_config", "check_cell", "check_kernels",
+    "check_paging", "run_analysis",
+]

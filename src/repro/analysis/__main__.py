@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis [--strict] [--json PATH] ...``.
+
+Exit code 0 == clean (under ``--strict``, *any* finding fails; otherwise
+only ``severity == "error"`` findings do)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static kernel-contract & config-rot checker: jaxpr "
+                    "lints, donation checks, BlockSpec bounds proofs, and "
+                    "paging invariants over every shipped config.")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated config names (default: all)")
+    ap.add_argument("--modes", default=None,
+                    help="comma-separated kernel modes "
+                         "(default: reference,interpret)")
+    ap.add_argument("--quants", default=None,
+                    help="comma-separated quant modes (default: none,w8a8)")
+    ap.add_argument("--disable", action="append", default=[], metavar="RULE",
+                    help="disable a rule id (repeatable)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on any finding, warnings included")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full report as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-cell progress lines")
+    args = ap.parse_args(argv)
+
+    # import after arg parsing so ``--list-rules``/``--help`` stay instant
+    from repro.analysis.findings import RULES
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    for rule in args.disable:
+        if rule not in RULES:
+            ap.error(f"unknown rule {rule!r}; see --list-rules")
+
+    from repro.analysis.runner import run_analysis
+    progress = None if args.quiet else (
+        lambda msg: print(f"[analysis] {msg}", file=sys.stderr, flush=True))
+    report = run_analysis(
+        configs=args.configs.split(",") if args.configs else None,
+        modes=args.modes.split(",") if args.modes else ("reference",
+                                                        "interpret"),
+        quants=args.quants.split(",") if args.quants else ("none", "w8a8"),
+        disabled=args.disable,
+        progress=progress)
+
+    for f in report.findings:
+        print(f)
+    if args.json:
+        report.dump(args.json)
+    n = len(report.findings)
+    print(f"[analysis] {len(report.checked)} surfaces checked, "
+          f"{n} finding{'s' if n != 1 else ''}"
+          + (f", disabled: {','.join(report.disabled)}"
+             if report.disabled else ""))
+    return report.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Donation checks (rules D001/D002): structural multiset comparison of the
+donated input buffers of a jitted executable against its output buffers.
+
+XLA reuses a donated input for an output only when some output has the same
+(shape, dtype); a donated buffer with no structural match is *dead* — the
+caller gave up the buffer and XLA allocates a fresh output anyway (silently,
+modulo a warning the serving loop never surfaces).  More donated buffers of
+one signature than outputs that can absorb them is the duplicate case."""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+
+from repro.analysis.findings import Finding
+
+
+def _sig_counts(tree: Any) -> Counter:
+    leaves = jax.tree.leaves(tree)
+    return Counter((tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves)
+
+
+def check_donation(fn: Callable, args: Sequence[Any],
+                   donate_argnums: Tuple[int, ...],
+                   context: str = "") -> List[Finding]:
+    """Compare donated-arg leaf signatures against ``fn``'s output leaves.
+
+    ``args`` may be concrete arrays or ``ShapeDtypeStruct``s — only shapes
+    are consumed (`jax.eval_shape` does the tracing)."""
+    out: List[Finding] = []
+    outputs = jax.eval_shape(fn, *args)
+    out_sigs = _sig_counts(outputs)
+    donated = Counter()
+    for argnum in donate_argnums:
+        donated.update(_sig_counts(args[argnum]))
+    for sig, n_donated in sorted(donated.items()):
+        n_out = out_sigs.get(sig, 0)
+        if n_out == 0:
+            out.append(Finding(
+                "D001",
+                f"donated buffer {sig[0]} {sig[1]} (x{n_donated}) matches no "
+                f"output — the donation is dead and XLA allocates a fresh "
+                f"buffer", context))
+        elif n_donated > n_out:
+            out.append(Finding(
+                "D002",
+                f"{n_donated} donated buffers of {sig[0]} {sig[1]} but only "
+                f"{n_out} matching outputs — {n_donated - n_out} donation(s) "
+                f"cannot be absorbed", context))
+    return out

@@ -1,0 +1,162 @@
+"""Jaxpr lints (rules J001-J005): recursive walk over every sub-jaxpr of a
+traced serving executable, flagging dtype-contract violations, host
+transfers, and executables with large baked-in constants.
+
+The walk is structural — primitives are matched by name, sub-jaxprs are
+discovered by duck typing (anything in ``eqn.params`` exposing ``.eqns`` is
+an open ``Jaxpr``; anything exposing ``.jaxpr`` is a ``ClosedJaxpr``) — so
+it survives jax-internal renames and sees inside ``scan``/``cond``/``pjit``/
+``custom_vjp``/``pallas_call`` bodies alike."""
+from __future__ import annotations
+
+from typing import Any, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+# baked constants above this many bytes are a recompile/memory hazard
+CONST_BYTES_THRESHOLD = 64 * 1024
+
+_LOW_FLOATS = {jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)}
+_INT8S = {jnp.dtype(jnp.int8), jnp.dtype(jnp.uint8)}
+_WIDE = {jnp.dtype(jnp.float64), jnp.dtype(jnp.complex128)}
+_HOST_PRIMS = {"infeed", "outfeed", "device_put", "copy_to_host_async"}
+
+
+def _dtype_of(var: Any):
+    aval = getattr(var, "aval", None)
+    dt = getattr(aval, "dtype", None)
+    try:
+        return jnp.dtype(dt) if dt is not None else None
+    except TypeError:  # extended dtypes (typed PRNG keys) are not lintable
+        return None
+
+
+def _src(eqn: Any) -> Tuple[Optional[str], Optional[int]]:
+    """Best-effort repo-relative provenance of one equation."""
+    try:
+        frames = eqn.source_info.traceback.frames
+    except Exception:
+        return None, None
+    repo_frame = user_frame = None
+    for fr in frames:
+        name = getattr(fr, "file_name", "") or ""
+        if "/repro/" in name and "/analysis/" not in name:
+            repo_frame = fr  # innermost repo frame wins
+            break
+        if user_frame is None and "site-packages" not in name \
+                and "/jax/" not in name:
+            user_frame = fr  # first non-library frame as fallback
+    fr = repo_frame or user_frame
+    if fr is None:
+        return None, None
+    return getattr(fr, "file_name", None), getattr(fr, "line_num", None)
+
+
+def iter_jaxprs(closed: Any) -> Iterator[Tuple[Any, list]]:
+    """Yield ``(jaxpr, consts)`` for the closed jaxpr and every nested one."""
+    seen: set = set()
+    stack: List[Tuple[Any, list]] = []
+
+    def push(obj: Any) -> None:
+        if hasattr(obj, "jaxpr") and hasattr(obj, "consts"):  # ClosedJaxpr
+            inner = obj.jaxpr
+            if id(inner) not in seen:
+                seen.add(id(inner))
+                stack.append((inner, list(obj.consts)))
+        elif hasattr(obj, "eqns"):  # open Jaxpr
+            if id(obj) not in seen:
+                seen.add(id(obj))
+                stack.append((obj, []))
+
+    push(closed)
+    while stack:
+        jaxpr, consts = stack.pop()
+        yield jaxpr, consts
+        for eqn in jaxpr.eqns:
+            for val in eqn.params.values():
+                if isinstance(val, (tuple, list)):
+                    for item in val:
+                        push(item)
+                else:
+                    push(val)
+
+
+def lint_jaxpr(closed: Any, context: str = "") -> List[Finding]:
+    """Run rules J001-J005 over a ``ClosedJaxpr`` (from ``jax.make_jaxpr``)."""
+    out: List[Finding] = []
+
+    for jaxpr, consts in iter_jaxprs(closed):
+        for c in consts:
+            size = getattr(c, "size", 0) * getattr(
+                getattr(c, "dtype", None), "itemsize", 0)
+            if size > CONST_BYTES_THRESHOLD:
+                out.append(Finding(
+                    "J004",
+                    f"executable bakes in a constant of {size} bytes "
+                    f"(shape {getattr(c, 'shape', '?')}, "
+                    f"dtype {getattr(c, 'dtype', '?')}); pass it as an "
+                    f"argument instead", context))
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            fpath, fline = _src(eqn)
+
+            if name == "convert_element_type":
+                src_dt = _dtype_of(eqn.invars[0])
+                dst_dt = _dtype_of(eqn.outvars[0])
+                if (src_dt in _INT8S and dst_dt is not None
+                        and jnp.issubdtype(dst_dt, jnp.floating)):
+                    out.append(Finding(
+                        "J001",
+                        f"int8 -> {dst_dt} convert: dequantization must go "
+                        f"through the int32-accumulate epilogue, not a "
+                        f"stray element cast", context, fpath, fline))
+
+            if name in ("dot_general", "conv_general_dilated"):
+                lhs, rhs = _dtype_of(eqn.invars[0]), _dtype_of(eqn.invars[1])
+                odt = _dtype_of(eqn.outvars[0])
+                if lhs in _INT8S or rhs in _INT8S:
+                    if odt != jnp.dtype(jnp.int32):
+                        out.append(Finding(
+                            "J002",
+                            f"int8 dot accumulates into {odt}; packed GEMMs "
+                            f"must use preferred_element_type=int32",
+                            context, fpath, fline))
+                elif lhs in _LOW_FLOATS or rhs in _LOW_FLOATS:
+                    if odt in _LOW_FLOATS:
+                        out.append(Finding(
+                            "J002",
+                            f"{lhs} x {rhs} dot accumulates into {odt}; use "
+                            f"preferred_element_type=f32 and cast the result "
+                            f"once", context, fpath, fline))
+
+            if name in _HOST_PRIMS or "callback" in name:
+                out.append(Finding(
+                    "J003",
+                    f"host-transfer primitive '{name}' inside a serving "
+                    f"executable", context, fpath, fline))
+
+            for var in eqn.outvars:
+                dt = _dtype_of(var)
+                if dt in _WIDE:
+                    out.append(Finding(
+                        "J005",
+                        f"{dt} value produced by '{name}' — x64 mode leaking "
+                        f"into a serving executable", context, fpath, fline))
+    return out
+
+
+def check_logits_dtype(logits_aval: Any, context: str = "") -> List[Finding]:
+    """Rule J006: serving logits must reach the sampler in f32."""
+    dt = jnp.dtype(getattr(logits_aval, "dtype", np.float32))
+    if dt != jnp.dtype(jnp.float32):
+        return [Finding(
+            "J006",
+            f"model entry returns logits in {dt}; the sampler's f32 upcast "
+            f"then operates on quantized values (argmax ties / top-k tails "
+            f"resolve wrong) — request f32 from the logits GEMM epilogue",
+            context)]
+    return []

@@ -14,7 +14,7 @@ Gemma-3 5:1) remain exact.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Sequence
 
 import jax.numpy as jnp

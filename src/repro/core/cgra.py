@@ -18,7 +18,7 @@ tile and the MOB double-buffering to the Pallas HBM->VMEM pipeline.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

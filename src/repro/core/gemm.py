@@ -13,11 +13,15 @@ from repro.core.quant import QTensor, quantize
 from repro.kernels.ops import cgra_matmul, cgra_matmul_int8
 
 
-def cgra_gemm(a, b, mode: str = "reference"):
-    """C = A[..., M, K] @ B[K, N]; leading batch dims of A are flattened."""
+def cgra_gemm(a, b, mode: str = "reference", out_dtype=None):
+    """C = A[..., M, K] @ B[K, N]; leading batch dims of A are flattened.
+
+    ``out_dtype`` selects the store dtype of the f32 accumulator (default:
+    ``a.dtype``) — full-precision consumers request f32 directly instead of
+    round-tripping through the compute dtype."""
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
-    out = cgra_matmul(a2, b, mode)
+    out = cgra_matmul(a2, b, mode, out_dtype)
     return out.reshape(*lead, b.shape[-1])
 
 

@@ -14,12 +14,11 @@ collective schedule against the XLA default.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # moved out of experimental in newer jax releases
     from jax.experimental.shard_map import shard_map
@@ -82,7 +81,6 @@ def matmul_reducescatter_ring(h_full, w_local, axis_name="model"):
     idx = lax.axis_index(axis_name)
     T, Fl = h_full.shape
     Tl = T // tp
-    D = w_local.shape[1]
     perm = _ring_perm(axis_name, shift=1)
 
     def chunk_mm(c):
@@ -148,7 +146,6 @@ def torus_ffn(x, w_gate, w_up, w_down, mesh: Mesh, axis_name="model",
         y = matmul_reducescatter_ring(h, wd, axis_name)  # [B*Sl, D]
         return y.reshape(B, Sl, D)
 
-    tp = mesh.shape[axis_name]
     spec_x = P(None, axis_name, None)
     spec_w_col = P(None, axis_name)
     spec_w_row = P(axis_name, None)

@@ -18,9 +18,8 @@ from typing import Iterator
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 
 
 class SyntheticLM:

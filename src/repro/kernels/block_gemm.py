@@ -25,8 +25,50 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.cgra import select_block_shapes
+from repro.kernels.spec import KernelSpec, OperandSpec, provenance
 
 F32 = jnp.float32
+
+
+def gemm_spec(M: int, K: int, N: int, *, block_shape=None,
+              dtype_bytes: int = 4, int8: bool = False) -> KernelSpec:
+    """Grid/BlockSpec contract of ``block_gemm`` / ``block_gemm_int8``."""
+    if block_shape is None:
+        block_shape = select_block_shapes(M, K, N, dtype_bytes=dtype_bytes)
+    bm, bk, bn = block_shape
+    Mp, Kp, Np = (-(-M // bm)) * bm, (-(-K // bk)) * bk, (-(-N // bn)) * bn
+    nm, nn, nk = Mp // bm, Np // bn, Kp // bk
+
+    def a_map(i, j, k):
+        return (i, k)
+
+    def b_map(i, j, k):
+        return (k, j)
+
+    def o_map(i, j, k):
+        return (i, j)
+
+    operands = [
+        OperandSpec("a", (bm, bk), a_map, (nm, nk)),
+        OperandSpec("b", (bk, bn), b_map, (nk, nn)),
+    ]
+    if int8:
+        operands += [
+            OperandSpec("a_scale", (bm, 1), lambda i, j, k: (i, 0), (nm, 1)),
+            OperandSpec("b_scale", (1, bn), lambda i, j, k: (0, j), (1, nn)),
+        ]
+    operands.append(OperandSpec("o", (bm, bn), o_map, (nm, nn),
+                                is_output=True))
+    src_file, src_line = provenance(a_map)
+    return KernelSpec(
+        name="block_gemm_int8" if int8 else "block_gemm",
+        grid=(nm, nn, nk),
+        scalars=(),
+        operands=tuple(operands),
+        block_live=None,  # dense GEMM: every block is live
+        reduction_axes=(2,),
+        src_file=src_file, src_line=src_line,
+    )
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
@@ -61,23 +103,22 @@ def block_gemm(a, b, *, block_shape=None, out_dtype=None, interpret=False):
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
-    if block_shape is None:
-        block_shape = select_block_shapes(M, K, N, dtype_bytes=a.dtype.itemsize)
-    bm, bk, bn = block_shape
+    spec = gemm_spec(M, K, N, block_shape=block_shape,
+                     dtype_bytes=a.dtype.itemsize)
+    bm, bk, bn = (spec.operands[0].block_shape[0],
+                  spec.operands[0].block_shape[1],
+                  spec.operands[1].block_shape[1])
     ap = _pad_to(a, bm, bk)
     bp = _pad_to(b, bk, bn)
-    Mp, Kp = ap.shape
-    Np = bp.shape[1]
-    nk = Kp // bk
-    grid = (Mp // bm, Np // bn, nk)
+    Mp, Np = spec.grid[0] * bm, spec.grid[1] * bn
+    nk = spec.grid[2]
     out = pl.pallas_call(
         functools.partial(_gemm_kernel, nk=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
         interpret=interpret,
@@ -111,27 +152,24 @@ def block_gemm_int8(a_q, b_q, a_scale, b_scale, *, block_shape=None,
     """
     M, K = a_q.shape
     N = b_q.shape[1]
-    if block_shape is None:
-        block_shape = select_block_shapes(M, K, N, dtype_bytes=1)
-    bm, bk, bn = block_shape
+    spec = gemm_spec(M, K, N, block_shape=block_shape, dtype_bytes=1,
+                     int8=True)
+    bm, bk, bn = (spec.operands[0].block_shape[0],
+                  spec.operands[0].block_shape[1],
+                  spec.operands[1].block_shape[1])
     ap = _pad_to(a_q, bm, bk)
     bp = _pad_to(b_q, bk, bn)
     sa = _pad_to(a_scale.astype(F32), bm, 1)
     sb = _pad_to(b_scale.astype(F32), 1, bn)
-    Mp, Kp = ap.shape
-    Np = bp.shape[1]
-    nk = Kp // bk
-    grid = (Mp // bm, Np // bn, nk)
+    Mp, Np = spec.grid[0] * bm, spec.grid[1] * bn
+    nk = spec.grid[2]
     out = pl.pallas_call(
         functools.partial(_gemm_int8_kernel, nk=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,

@@ -48,9 +48,123 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import round_up
+from repro.kernels.spec import KernelSpec, OperandSpec, ScalarSpec, provenance
 
 F32 = jnp.float32
 NEG = -1e30
+
+
+def _fd_block_live(ik, p_b, s_b, *, bk: int, layout: str):
+    """Liveness of k-block ``ik`` for a slot with bounds ``[s_b, p_b]``.
+
+    Linear layout: the block overlaps the live row range.  Ring layout: live
+    entries can sit anywhere in the buffer, so every block of a non-drained
+    slot is live (there is no dead-block DMA-elision contract for rings).
+    Shared between the kernel body (``pl.when``) and the spec builders."""
+    if layout == "linear":
+        return (ik * bk <= p_b) & (ik * bk + bk > s_b)
+    return p_b >= s_b
+
+
+def fd_dense_spec(B: int, H: int, K: int, S: int, dq: int, dv: int, *,
+                  layout: str = "linear", bk: int = 128) -> KernelSpec:
+    """Grid/BlockSpec contract of the dense ``flash_decode`` kernel.
+
+    Scalar domains are hostile: ``pos`` reaches ``S`` (a frozen slot whose
+    last token filled the cache keeps ``pos == S``) and ``start`` may exceed
+    ``pos`` (a drained slot).  The ring layout has ``block_live=None``: its
+    slot-level ``pl.when`` gate skips compute but every block's DMA still
+    runs, since any entry of a wrapped buffer may be live."""
+    G = H // K
+    Gp = round_up(G, 8)
+    bk_ = min(bk, S)
+    if S % bk_:
+        divs = [d for d in range(32, bk_ + 1) if S % d == 0 and d % 8 == 0]
+        if divs:
+            bk_ = max(divs)
+    Sp = round_up(S, bk_)
+    nk = Sp // bk_
+
+    def q_map(b, kh, ik, *_):
+        return (b, kh, 0, 0)
+
+    def kv_map(b, kh, ik, pos_ref, start_ref):
+        if layout == "linear":
+            # dead k-blocks (outside [start, pos]) revisit a live block
+            # index instead: the grid pipeline elides the repeated DMA, so
+            # HBM traffic — the cost that dominates decode — is bounded by
+            # the live length, not the cache capacity.  The kernel skips
+            # their compute (block_live) so the remapped data is never read.
+            lo = jnp.minimum(start_ref[b] // bk_, nk - 1)
+            hi = jnp.minimum(pos_ref[b] // bk_, nk - 1)  # pos >= S: dropped
+            ik = jnp.clip(ik, lo, hi)
+        return (b, ik, kh, 0)
+
+    def block_live(b, kh, ik, pos, start):
+        return _fd_block_live(ik, pos[b], start[b], bk=bk_, layout=layout)
+
+    src_file, src_line = provenance(kv_map)
+    return KernelSpec(
+        name=f"flash_decode_{layout}",
+        grid=(B, K, nk),
+        scalars=(
+            ScalarSpec("pos", (B,), 0, S),
+            ScalarSpec("start", (B,), 0, S),
+        ),
+        operands=(
+            OperandSpec("q", (1, 1, Gp, dq), q_map, (B, K, 1, 1)),
+            OperandSpec("k", (1, bk_, 1, dq), kv_map, (B, nk, K, 1)),
+            OperandSpec("v", (1, bk_, 1, dv), kv_map, (B, nk, K, 1)),
+            OperandSpec("o", (1, 1, Gp, dv), q_map, (B, K, 1, 1),
+                        is_output=True),
+        ),
+        block_live=block_live if layout == "linear" else None,
+        reduction_axes=(2,),
+        src_file=src_file, src_line=src_line,
+    )
+
+
+def fd_paged_spec(B: int, H: int, K: int, dq: int, dv: int, ps: int,
+                  npp: int, n_pages: int) -> KernelSpec:
+    """Grid/BlockSpec contract of the paged ``flash_decode`` kernel."""
+    G = H // K
+    Gp = round_up(G, 8)
+    S = npp * ps
+
+    def q_map(b, kh, ik, *_):
+        return (b, kh, 0, 0)
+
+    def kv_map(b, kh, ik, pos_ref, start_ref, pages_ref):
+        # dead logical blocks revisit a live page (repeat index -> the DMA
+        # is elided), exactly like the dense linear layout's clipping
+        lo = jnp.minimum(start_ref[b] // ps, npp - 1)
+        hi = jnp.minimum(pos_ref[b] // ps, npp - 1)
+        ik = jnp.clip(ik, lo, hi)
+        return (pages_ref[b, ik], 0, kh, 0)
+
+    def block_live(b, kh, ik, pos, start, pages):
+        return _fd_block_live(ik, pos[b], start[b], bk=ps, layout="linear")
+
+    src_file, src_line = provenance(kv_map)
+    return KernelSpec(
+        name="flash_decode_paged",
+        grid=(B, K, npp),
+        scalars=(
+            ScalarSpec("pos", (B,), 0, S),
+            ScalarSpec("start", (B,), 0, S),
+            ScalarSpec("pages", (B, npp), 0, n_pages - 1),
+        ),
+        operands=(
+            OperandSpec("q", (1, 1, Gp, dq), q_map, (B, K, 1, 1)),
+            OperandSpec("k", (1, ps, 1, dq), kv_map, (n_pages, 1, K, 1)),
+            OperandSpec("v", (1, ps, 1, dv), kv_map, (n_pages, 1, K, 1)),
+            OperandSpec("o", (1, 1, Gp, dv), q_map, (B, K, 1, 1),
+                        is_output=True),
+        ),
+        block_live=block_live,
+        reduction_axes=(2,),
+        src_file=src_file, src_line=src_line,
+    )
 
 
 def _fd_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
@@ -74,12 +188,10 @@ def _fd_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
     p_b = pos_ref[b]
     s_b = start_ref[b]
 
-    if layout == "linear":
-        # live rows are exactly [start, pos]: skip blocks fully outside —
-        # the streamed score work is bounded by the live length, not S.
-        block_live = (ik * bk <= p_b) & (ik * bk + bk > s_b)
-    else:  # ring: live entries can sit anywhere in the buffer
-        block_live = (p_b >= s_b)
+    # linear: live rows are exactly [start, pos] — skip blocks fully outside
+    # so the streamed score work is bounded by the live length, not S.
+    # ring: live entries can sit anywhere, gate only on a drained slot.
+    block_live = _fd_block_live(ik, p_b, s_b, bk=bk, layout=layout)
 
     @pl.when(block_live)
     def _block():
@@ -155,26 +267,15 @@ def _flash_decode_paged(q, k, v, pos, start, pages, *, softcap: float,
     qg = q.reshape(B, K, G, dq)
     if Gp != G:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
-    grid = (B, K, npp)
-
-    def kv_map(b, kh, ik, pos_ref, start_ref, pages_ref):
-        # dead logical blocks revisit a live page (repeat index -> the DMA
-        # is elided), exactly like the dense linear layout's clipping
-        lo = jnp.minimum(start_ref[b] // ps, npp - 1)
-        hi = jnp.minimum(pos_ref[b] // ps, npp - 1)
-        ik = jnp.clip(ik, lo, hi)
-        return (pages_ref[b, ik], 0, kh, 0)
+    spec = fd_paged_spec(B, H, K, dq, dv, ps, npp, k.shape[0])
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # pos, start, pages
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, Gp, dq), lambda b, kh, ik, *_: (b, kh, 0, 0)),
-            pl.BlockSpec((1, ps, 1, dq), kv_map),
-            pl.BlockSpec((1, ps, 1, dv), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, Gp, dv),
-                               lambda b, kh, ik, *_: (b, kh, 0, 0)),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         scratch_shapes=[
             pltpu.VMEM((Gp, 1), F32),
             pltpu.VMEM((Gp, 1), F32),
@@ -237,49 +338,28 @@ def flash_decode(q, k, v, pos, start=None, *, layout: str = "linear",
         v = v.astype(q.dtype)
 
     # sublane-align the per-kv-head query group; padded rows are sliced off
+    # (block sizing — the largest sublane-aligned divisor of S when S % bk
+    # is awkward — lives in fd_dense_spec so the prover sees the same grid)
     Gp = round_up(G, 8)
     qg = q.reshape(B, K, G, dq)
     if Gp != G:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
-    bk_ = min(bk, S)
-    if S % bk_:
-        # prefer the largest sublane-aligned divisor of S (if a reasonable
-        # one exists) so the cache is never re-padded in HBM on the
-        # per-token hot path; awkward capacities fall back to grid padding
-        # + in-kernel masking
-        divs = [d for d in range(32, bk_ + 1) if S % d == 0 and d % 8 == 0]
-        if divs:
-            bk_ = max(divs)
-    Sp = round_up(S, bk_)
+    spec = fd_dense_spec(B, H, K, S, dq, dv, layout=layout, bk=bk)
+    bk_ = spec.operands[1].block_shape[1]
+    nk = spec.grid[2]
+    Sp = nk * bk_
     if Sp != S:
         pads = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
         k = jnp.pad(k, pads)
         v = k if shared else jnp.pad(v, pads)
-    nk = Sp // bk_
-    grid = (B, K, nk)
-
-    def kv_map(b, kh, ik, pos_ref, start_ref):
-        if layout == "linear":
-            # dead k-blocks (outside [start, pos]) revisit a live block
-            # index instead: the grid pipeline elides the repeated DMA, so
-            # HBM traffic — the cost that dominates decode — is bounded by
-            # the live length, not the cache capacity.  The kernel skips
-            # their compute (block_live) so the remapped data is never read.
-            lo = jnp.minimum(start_ref[b] // bk_, nk - 1)
-            hi = jnp.minimum(pos_ref[b] // bk_, nk - 1)  # pos >= S: dropped
-            ik = jnp.clip(ik, lo, hi)
-        return (b, ik, kh, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # pos, start
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, Gp, dq), lambda b, kh, ik, *_: (b, kh, 0, 0)),
-            pl.BlockSpec((1, bk_, 1, dq), kv_map),
-            pl.BlockSpec((1, bk_, 1, dv), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, Gp, dv),
-                               lambda b, kh, ik, *_: (b, kh, 0, 0)),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         scratch_shapes=[
             pltpu.VMEM((Gp, 1), F32),
             pltpu.VMEM((Gp, 1), F32),

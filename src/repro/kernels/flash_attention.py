@@ -19,9 +19,99 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import round_up
+from repro.kernels.spec import KernelSpec, OperandSpec, ScalarSpec, provenance
 
 F32 = jnp.float32
 NEG = -1e30
+
+
+def _paged_block_live(iq, ik, qs, kl, *, bq: int, ps: int):
+    """Liveness of page ``ik`` for q-block ``iq``: the page holds valid rows
+    and is not entirely past the block's causal horizon.  Shared between the
+    kernel body (``pl.when``) and :func:`fa_paged_spec` (bounds prover)."""
+    return (ik * ps < kl) & (ik * ps <= qs + (iq + 1) * bq - 1)
+
+
+def fa_dense_spec(B: int, H: int, K: int, Sq: int, Sk: int, d: int, *,
+                  bq: int = 128, bk: int = 128) -> KernelSpec:
+    """Grid/BlockSpec contract of the dense ``flash_attention`` kernel."""
+    G = H // K
+    bq_, bk_ = min(bq, Sq), min(bk, Sk)
+    Sqp, Skp = round_up(Sq, bq_), round_up(Sk, bk_)
+    nk = Skp // bk_
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        return ((bh // H) * K + (bh % H) // G, ik, 0)
+
+    src_file, src_line = provenance(kv_map)
+    return KernelSpec(
+        name="flash_attention",
+        grid=(B * H, Sqp // bq_, nk),
+        scalars=(),
+        operands=(
+            OperandSpec("q", (1, bq_, d), q_map, (B * H, Sqp // bq_, 1)),
+            OperandSpec("k", (1, bk_, d), kv_map, (B * K, nk, 1)),
+            OperandSpec("v", (1, bk_, d), kv_map, (B * K, nk, 1)),
+            OperandSpec("o", (1, bq_, d), q_map, (B * H, Sqp // bq_, 1),
+                        is_output=True),
+        ),
+        block_live=None,  # every (q-block, k-block) pair is visited
+        reduction_axes=(2,),
+        src_file=src_file, src_line=src_line,
+    )
+
+
+def fa_paged_spec(B: int, H: int, K: int, C: int, d: int, ps: int, npp: int,
+                  n_pages: int, *, bq: int = 128) -> KernelSpec:
+    """Grid/BlockSpec contract of the paged chunk-prefill attention kernel.
+
+    Scalar domains are hostile: ``q_start``/``k_len`` range over the full
+    logical capacity (including ``k_len == 0`` — an empty chunk — and
+    ``q_start == npp * ps``), and page-table entries over every pool page.
+    """
+    G = H // K
+    bq_ = min(bq, round_up(C, 8))
+    Cp = round_up(C, bq_)
+    S = npp * ps
+
+    def q_map(b, h, iq, ik, *_):
+        return (b, h, iq, 0)
+
+    def kv_map(b, h, iq, ik, qstart_ref, klen_ref, pages_ref):
+        # dead logical pages revisit a live one (repeat index -> the DMA is
+        # elided); the kernel gates their compute via _paged_block_live
+        hi_k = (klen_ref[b] - 1) // ps
+        hi_c = (qstart_ref[b] + (iq + 1) * bq_ - 1) // ps
+        hi = jnp.clip(jnp.minimum(hi_k, hi_c), 0, npp - 1)
+        ik = jnp.minimum(ik, hi)
+        return (pages_ref[b, ik], 0, h // G, 0)
+
+    def block_live(b, h, iq, ik, qstart, klen, pages):
+        return _paged_block_live(iq, ik, qstart[b], klen[b], bq=bq_, ps=ps)
+
+    src_file, src_line = provenance(kv_map)
+    return KernelSpec(
+        name="flash_attention_paged",
+        grid=(B, H, Cp // bq_, npp),
+        scalars=(
+            ScalarSpec("q_start", (B,), 0, S),
+            ScalarSpec("k_len", (B,), 0, S),
+            ScalarSpec("pages", (B, npp), 0, n_pages - 1),
+        ),
+        operands=(
+            OperandSpec("q", (1, 1, bq_, d), q_map, (B, H, Cp // bq_, 1)),
+            OperandSpec("k", (1, ps, 1, d), kv_map, (n_pages, 1, K, 1)),
+            OperandSpec("v", (1, ps, 1, d), kv_map, (n_pages, 1, K, 1)),
+            OperandSpec("o", (1, 1, bq_, d), q_map, (B, H, Cp // bq_, 1),
+                        is_output=True),
+        ),
+        block_live=block_live,
+        reduction_axes=(3,),
+        src_file=src_file, src_line=src_line,
+    )
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -108,7 +198,7 @@ def _fa_kernel_paged(qstart_ref, klen_ref, pages_ref, q_ref, k_ref, v_ref,
     kl = klen_ref[b]
     # skip pages past the valid rows or past this q-block's causal horizon;
     # their DMA was already elided by the index-map clip, never read them.
-    block_live = (ik * ps < kl) & (ik * ps <= qs + (iq + 1) * bq - 1)
+    block_live = _paged_block_live(iq, ik, qs, kl, bq=bq, ps=ps)
 
     @pl.when(block_live)
     def _block():
@@ -157,7 +247,6 @@ def _flash_attention_paged(q, k, v, pages, q_start, k_len, *, window: int,
     B, H, C, d = q.shape
     ps, K = k.shape[1], k.shape[2]
     npp = pages.shape[1]
-    G = H // K
     scale = scale if scale is not None else d ** -0.5
     q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
     k_len = jnp.broadcast_to(jnp.asarray(k_len, jnp.int32), (B,))
@@ -167,33 +256,19 @@ def _flash_attention_paged(q, k, v, pages, q_start, k_len, *, window: int,
     if v.dtype != q.dtype:
         v = v.astype(q.dtype)
 
-    bq_ = min(bq, round_up(C, 8))
-    Cp = round_up(C, bq_)
+    spec = fa_paged_spec(B, H, K, C, d, ps, npp, k.shape[0], bq=bq)
+    bq_ = spec.outputs[0].block_shape[2]
+    Cp = spec.grid[2] * bq_
     if Cp != C:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, Cp - C), (0, 0)))
-    grid = (B, H, Cp // bq_, npp)
-
-    def q_map(b, h, iq, ik, *_):
-        return (b, h, iq, 0)
-
-    def kv_map(b, h, iq, ik, qstart_ref, klen_ref, pages_ref):
-        # dead logical pages revisit a live one (repeat index -> the DMA is
-        # elided); the kernel gates their compute via block_live
-        hi_k = (klen_ref[b] - 1) // ps
-        hi_c = (qstart_ref[b] + (iq + 1) * bq_ - 1) // ps
-        hi = jnp.clip(jnp.minimum(hi_k, hi_c), 0, npp - 1)
-        ik = jnp.minimum(ik, hi)
-        return (pages_ref[b, ik], 0, h // G, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # q_start, k_len, pages
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq_, d), q_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq_, d), q_map),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         scratch_shapes=[
             pltpu.VMEM((bq_, 1), F32),
             pltpu.VMEM((bq_, 1), F32),
@@ -232,9 +307,10 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
     B, H, Sq, d = q.shape
     K = k.shape[1]
     Sk = k.shape[2]
-    G = H // K
-    bq_, bk_ = min(bq, Sq), min(bk, Sk)
-    Sqp, Skp = round_up(Sq, bq_), round_up(Sk, bk_)
+    spec = fa_dense_spec(B, H, K, Sq, Sk, d, bq=bq, bk=bk)
+    bq_ = spec.operands[0].block_shape[1]
+    bk_ = spec.operands[1].block_shape[1]
+    Sqp, Skp = spec.grid[1] * bq_, spec.grid[2] * bk_
     if Sqp != Sq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
     if Skp != Sk:
@@ -244,21 +320,15 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
     qf = q.reshape(B * H, Sqp, d)
     kf = k.reshape(B * K, Skp, d)
     vf = v.reshape(B * K, Skp, d)
-    nk = Skp // bk_
-    grid = (B * H, Sqp // bq_, nk)
-
-    def kv_map(bh, iq, ik):
-        return ((bh // H) * K + (bh % H) // G, ik, 0)
+    nk = spec.grid[2]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=0,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
-            pl.BlockSpec((1, bk_, d), kv_map),
-            pl.BlockSpec((1, bk_, d), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, bq_, d), lambda bh, iq, ik: (bh, iq, 0)),
+        grid=spec.grid,
+        in_specs=[pl.BlockSpec(op.block_shape, op.index_map)
+                  for op in spec.inputs],
+        out_specs=pl.BlockSpec(spec.outputs[0].block_shape,
+                               spec.outputs[0].index_map),
         scratch_shapes=[
             pltpu.VMEM((bq_, 1), F32),
             pltpu.VMEM((bq_, 1), F32),

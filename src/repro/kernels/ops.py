@@ -15,19 +15,24 @@ from repro.kernels.decode_attention import flash_decode
 from repro.kernels.flash_attention import flash_attention
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def cgra_matmul(a, b, mode: str = "reference"):
-    """C = A @ B through the CGRA block-GEMM path."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def cgra_matmul(a, b, mode: str = "reference", out_dtype=None):
+    """C = A @ B through the CGRA block-GEMM path.
+
+    ``out_dtype`` requests the epilogue's store dtype: the f32 accumulator
+    is cast exactly once, so callers that need full-precision outputs (the
+    logits head) avoid an f32 -> compute-dtype -> f32 round trip."""
     if mode == "reference":
-        return ref.block_gemm_ref(a, b)
-    return block_gemm(a, b, interpret=(mode == "interpret"))
+        return ref.block_gemm_ref(a, b, out_dtype=out_dtype)
+    return block_gemm(a, b, out_dtype=out_dtype,
+                      interpret=(mode == "interpret"))
 
 
-def _mm_fwd(a, b, mode):
-    return cgra_matmul(a, b, mode), (a, b)
+def _mm_fwd(a, b, mode, out_dtype):
+    return cgra_matmul(a, b, mode, out_dtype), (a, b)
 
 
-def _mm_bwd(mode, res, g):
+def _mm_bwd(mode, out_dtype, res, g):
     a, b = res
     ga = cgra_matmul(g.astype(b.dtype), b.T, mode).astype(a.dtype)
     gb = cgra_matmul(a.T, g.astype(a.dtype), mode).astype(b.dtype)

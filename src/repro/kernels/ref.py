@@ -45,7 +45,9 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None,
     s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(mask[:, None], p, 0.0)  # all-masked row -> zeros, not 1/Sk
-    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    # f32 accumulation like the kernel's VMEM accumulator, one final cast
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=F32).astype(v.dtype)
 
 
 def flash_attention_paged_ref(q, k, v, pages, q_start, k_len, *, window=0,
@@ -91,7 +93,8 @@ def flash_attention_paged_ref(q, k, v, pages, q_start, k_len, *, window=0,
     s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(mask[:, None], p, 0.0)  # all-masked row -> zeros
-    return jnp.einsum("bhqs,bshd->bhqd", p.astype(vb.dtype), vb)
+    return jnp.einsum("bhqs,bshd->bhqd", p.astype(vb.dtype), vb,
+                      preferred_element_type=F32).astype(vb.dtype)
 
 
 def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
@@ -143,5 +146,6 @@ def flash_decode_ref(q, k, v, pos, start=None, *, layout="linear",
     s = jnp.where(vm, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(vm, p, 0.0)  # all-invalid slot -> zeros
-    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=F32).astype(v.dtype)
     return o.reshape(B, H, v.shape[-1])

@@ -7,7 +7,6 @@ the logical-axis rules.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax
@@ -15,7 +14,6 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.quant import QTensor
 from repro.launch import sharding as SH
 from repro.models import model as M
 from repro.models.params import ParamSpec, shape_tree

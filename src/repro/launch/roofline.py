@@ -205,13 +205,14 @@ def active_params(cfg) -> tuple[int, int]:
     """(total, active-per-token) parameter counts, from the param specs."""
     from repro.models.model import param_specs
     from repro.models.params import is_spec
-    import jax, math
+    import math
+
+    import jax
     total = active = 0
     for path, s in jax.tree_util.tree_flatten_with_path(
             param_specs(cfg), is_leaf=is_spec)[0]:
         n = math.prod(s.shape)
         total += n
-        keys = "/".join(str(getattr(p, "key", "")) for p in path)
         if "experts" in str(s.axes) and "ffn" in str(s.axes):
             active += n * cfg.experts_per_token / max(1, cfg.num_experts)
         elif "vocab" in str(s.axes):

@@ -10,10 +10,8 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.quant import QTensor

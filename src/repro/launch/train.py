@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduce_config
-from repro.data.pipeline import SyntheticLM, prefetching
+from repro.data.pipeline import SyntheticLM
 from repro.launch import sharding as SH
 from repro.launch.cells import prepare_arch
 from repro.launch.mesh import make_mesh

@@ -16,7 +16,6 @@ over the slot-indexed KV cache); see DESIGN.md §2/§6.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -60,22 +59,24 @@ ATTN_STUB: contextvars.ContextVar = contextvars.ContextVar("attn_stub",
 # ---------------------------------------------------------------------------
 
 
-def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = ()):
+def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = (), out_dtype=None):
     """x: [..., K] @ w -> [..., N] (or [..., *out_shape] with N = prod).
 
     ``w`` is either a float weight whose dims reshape row-major to [K, N]
     (e.g. wq: [D,H,dh] -> [D, H*dh]; wo: [H,dh,D] -> [H*dh, D] with the
     caller flattening x's head dims), or a ``QTensor`` holding the int8
-    quantization of that same [K, N] reshape.
+    quantization of that same [K, N] reshape.  ``out_dtype`` overrides the
+    store dtype of the accumulator (default: the compute dtype) — the
+    logits head requests f32 so full precision survives to the sampler.
     """
     Kdim = x.shape[-1]
     if isinstance(w, QTensor):
         w2 = QTensor(w.q.reshape(Kdim, -1), w.scale.reshape(1, -1))
         out = cgra_gemm_w8a8(x, w2, mode=cfg.kernel_mode,
-                             out_dtype=cfg.compute_dtype)
+                             out_dtype=out_dtype or cfg.compute_dtype)
     else:
         w2 = w.reshape(Kdim, -1).astype(cfg.compute_dtype)
-        out = cgra_gemm(x, w2, mode=cfg.kernel_mode)
+        out = cgra_gemm(x, w2, mode=cfg.kernel_mode, out_dtype=out_dtype)
     if out_shape:
         out = out.reshape(*out.shape[:-1], *out_shape)
     return out
@@ -243,7 +244,8 @@ def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
             s = jnp.where(mb, s, NEG_INF)
             s = jax.nn.softmax(s, axis=-1)
             s = jnp.where(mb, s, 0.0)  # all-masked rows -> zeros, not 1/Sk
-            return jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v)
+            return jnp.einsum("bkgst,btkd->bskgd", s.astype(v.dtype), v,
+                              preferred_element_type=F32).astype(v.dtype)
 
     if chunk and Sq > chunk:
         # pad the tail chunk so ragged Sq still runs blockwise (the padded
@@ -617,13 +619,15 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, pages=None):
     wkv_b = p["wkv_b"].astype(cfg.compute_dtype)  # [kvr, H, dn+dv]
     wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
-    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk,
+                       preferred_element_type=F32).astype(q_nope.dtype)
     q_cat = jnp.concatenate([q_lat, q_rope.astype(q_lat.dtype)], -1)
     o_lat = dispatch_attend_decode(
         cfg, q_cat, kv4, kv4, pos, None,
         layout=CacheLayout.PAGED if pages is not None else CacheLayout.LINEAR,
         pages=pages, scale=(dn + cfg.qk_rope_dim) ** -0.5, dv=kvr)
-    o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)  # expand to v space
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, wv,  # expand to v space
+                   preferred_element_type=F32).astype(o_lat.dtype)
     out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
     return out, {"kv": kv}
 
@@ -738,7 +742,6 @@ def _moe_expert_block(xt, wk3, idx3, sel3, pos3, wg, wu, wd, *, E_l: int,
     base_e = (lax.axis_index(axis) * E_l) if axis else 0
     G, T, D = xt.shape
     gi = jnp.arange(G)[:, None]
-    gi3 = gi[:, :, None]
 
     # dispatch: ein[g,e,c] = xt[g, idx3[g,e,c]-1] (slot 0 -> zero row).
     # All gathers/scatters are vmapped over G so it becomes an HLO operand
@@ -751,9 +754,12 @@ def _moe_expert_block(xt, wk3, idx3, sel3, pos3, wg, wu, wd, *, E_l: int,
     ein = jax.vmap(lambda xp, ix: xp[ix])(xt_pad, idx3)  # [G,E_l,C,D]
     if not manual:
         ein = constrain(ein, ("batch", "experts", None, "embed"))
-    g = jnp.einsum("gecd,edf->gecf", ein, wg.astype(dt))
-    u = jnp.einsum("gecd,edf->gecf", ein, wu.astype(dt))
-    eout = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, wd.astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", ein, wg.astype(dt),
+                   preferred_element_type=F32).astype(dt)
+    u = jnp.einsum("gecd,edf->gecf", ein, wu.astype(dt),
+                   preferred_element_type=F32).astype(dt)
+    eout = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, wd.astype(dt),
+                      preferred_element_type=F32).astype(dt)
     if not manual:
         eout = constrain(eout, ("batch", "experts", None, "embed"))
     # combine: scatter-ADD each slot's output back to its token (idx3 is the

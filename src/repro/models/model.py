@@ -8,8 +8,6 @@ so 95-layer models lower to compact HLO.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -403,7 +401,9 @@ def embed_tokens(cfg: ArchConfig, params, tokens):
 def embed_inputs(cfg: ArchConfig, params, batch: dict):
     if cfg.audio_frontend:
         return jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cfg.compute_dtype),
-                          params["frontend_proj"].astype(cfg.compute_dtype))
+                          params["frontend_proj"].astype(cfg.compute_dtype),
+                          preferred_element_type=jnp.float32
+                          ).astype(cfg.compute_dtype)
     return embed_tokens(cfg, params, batch["tokens"])
 
 
@@ -411,7 +411,9 @@ def project_images(cfg: ArchConfig, params, batch: dict):
     if not cfg.vision_tokens or "images" not in batch:
         return None
     return jnp.einsum("btf,fd->btd", batch["images"].astype(cfg.compute_dtype),
-                      params["vision_proj"].astype(cfg.compute_dtype))
+                      params["vision_proj"].astype(cfg.compute_dtype),
+                      preferred_element_type=jnp.float32
+                      ).astype(cfg.compute_dtype)
 
 
 def lm_logits(cfg: ArchConfig, params, hidden):
@@ -420,7 +422,10 @@ def lm_logits(cfg: ArchConfig, params, hidden):
         head = params["embed"].T if head is None else head
     else:
         head = params["lm_head"]
-    logits = L.dense_proj(cfg, hidden, head)
+    # f32 store: the GEMM epilogue's f32 accumulator reaches the sampler /
+    # loss untouched instead of round-tripping through the compute dtype
+    # (bf16 logits quantize argmax ties and top-k tails — analysis rule J006)
+    logits = L.dense_proj(cfg, hidden, head, out_dtype=jnp.float32)
     return constrain(logits, ("batch", "seq", "vocab"))
 
 

@@ -18,7 +18,6 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 class ParamSpec(NamedTuple):

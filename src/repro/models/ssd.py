@@ -70,11 +70,20 @@ def _segsum(x):
 
 def _proj_inputs(cfg, p, x):
     dt_ = cfg.compute_dtype
-    z = jnp.einsum("bsd,dhp->bshp", x, p["w_z"].astype(dt_))
-    xs = jnp.einsum("bsd,dhp->bshp", x, p["w_x"].astype(dt_))
-    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_))
-    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_))
-    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+    # f32 accumulation on every input projection; z/xs/B/C are stored back
+    # in the compute dtype (they feed the bf16 conv/gate path) while dt
+    # stays f32 — its only consumer is the f32 softplus/decay chain, so a
+    # downcast would just round-trip precision away (analysis rule J002).
+    z = jnp.einsum("bsd,dhp->bshp", x, p["w_z"].astype(dt_),
+                   preferred_element_type=F32).astype(dt_)
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["w_x"].astype(dt_),
+                    preferred_element_type=F32).astype(dt_)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_),
+                    preferred_element_type=F32).astype(dt_)
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_),
+                    preferred_element_type=F32).astype(dt_)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_),
+                    preferred_element_type=F32)
     return z, xs, Bm, Cm, dt
 
 
@@ -148,7 +157,8 @@ def ssd_forward(cfg: ArchConfig, p: dict, x, return_cache: bool = False):
     yf = y.astype(F32)
     yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=(-2, -1), keepdims=True) + 1e-6)
     y = (yf * p["norm"].astype(F32)).astype(cfg.compute_dtype)
-    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype))
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype),
+                     preferred_element_type=F32).astype(cfg.compute_dtype)
     if return_cache:
         cx, cB, cC = conv_tails
         return out, {"h": h_final, "conv_x": cx, "conv_B": cB, "conv_C": cC}
@@ -190,5 +200,6 @@ def ssd_decode(cfg: ArchConfig, p: dict, cache: dict, x):
     yf = y.astype(F32)
     yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=(-2, -1), keepdims=True) + 1e-6)
     y = (yf * p["norm"].astype(F32)).astype(cfg.compute_dtype)
-    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype))
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cfg.compute_dtype),
+                     preferred_element_type=F32).astype(cfg.compute_dtype)
     return out, {"h": h, "conv_x": cx, "conv_B": cB, "conv_C": cC}

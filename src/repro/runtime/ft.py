@@ -20,7 +20,6 @@ from typing import Any, Callable
 
 import numpy as np
 
-import jax
 
 from repro.checkpoint.manager import CheckpointManager
 

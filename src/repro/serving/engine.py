@@ -63,6 +63,7 @@ serving system.)
 """
 from __future__ import annotations
 
+import functools
 import time
 import warnings
 from collections import OrderedDict, deque
@@ -313,26 +314,26 @@ class ModelRunner:
         return jax.tree.map(w, self.cache_specs, caches, small,
                             is_leaf=is_spec)
 
+    def _whole_prefill(self, n: int, params, caches, tokens, table, slot,
+                       temp1, rkey):
+        """Exact-length whole-prompt prefill + cache insert (traceable —
+        ``repro.analysis`` walks this jaxpr; ``whole_prefill_fn`` jits it)."""
+        logits, small = M.prefill(self.cfg, params, {"tokens": tokens},
+                                  full_kv=True)
+        caches = self._scatter_new(caches, small, table, slot, n)
+        t0, key1 = self._sample(logits[:, -1], temp1[None], rkey[None])
+        return caches, t0[0], key1[0]
+
     def whole_prefill_fn(self, n: int, limit: int):
         """Jitted exact-length prefill + cache insert for mixers whose
         prefill is not prefix-decomposable (SSM / MLA / cross-attention —
         they cannot run as chunks over a paged past).  One compilation per
         prompt length, LRU-bounded like the mixed variants."""
-
-        def build():
-            cfg = self.cfg
-
-            def prefill(params, caches, tokens, table, slot, temp1, rkey):
-                logits, small = M.prefill(cfg, params, {"tokens": tokens},
-                                          full_kv=True)
-                caches = self._scatter_new(caches, small, table, slot, n)
-                t0, key1 = self._sample(logits[:, -1], temp1[None],
-                                        rkey[None])
-                return caches, t0[0], key1[0]
-
-            return jax.jit(prefill, donate_argnums=(1,))
-
-        return self._cached(("whole", n), build, limit)
+        return self._cached(
+            ("whole", n),
+            lambda: jax.jit(functools.partial(self._whole_prefill, n),
+                            donate_argnums=(1,)),
+            limit)
 
     def _cached(self, key, build, limit: int):
         fn = self.fns.pop(key, None)

@@ -242,3 +242,94 @@ class RadixCache:
             stack.extend(n.children.values())
             self.pool.decref(n.page)
         self.root.children.clear()
+
+
+def check_invariants(pool: PagePool, radix: RadixCache | None = None,
+                     tables=None) -> list[str]:
+    """Structural invariants of the paging state; returns violations (empty
+    list == healthy).  Reusable by tests, the engine, and the
+    ``repro.analysis`` CLI (rule P001).
+
+    ``tables`` — optional iterable of per-sequence page-id collections (the
+    scheduler's ``owned`` lists / page tables).  When given, refcounts are
+    reconciled exactly: ``rc[p] == #tables holding p + (1 if the radix tree
+    holds p)``.  Without it only one-sided bounds are checked (the pool
+    cannot know its external holders).  Call at quiescent points — mid-
+    admission pin/unpin windows legitimately hold transient references.
+    """
+    bad: list[str] = []
+    n = pool.n_pages
+    free = list(pool._free)
+    rc = list(pool._rc)
+
+    # trash page 0: pinned forever, never allocatable
+    if rc[0] < 1:
+        bad.append(f"trash page 0 has refcount {rc[0]} (must stay pinned)")
+    if 0 in free:
+        bad.append("trash page 0 is on the free list")
+
+    # free list: unique, in range, and exactly the rc == 0 pages
+    if len(set(free)) != len(free):
+        dup = sorted(p for p in set(free) if free.count(p) > 1)
+        bad.append(f"free list holds duplicate pages {dup}")
+    for p in free:
+        if not (0 < p < n):
+            bad.append(f"free list holds out-of-range page {p}")
+        elif rc[p] != 0:
+            bad.append(f"page {p} is free but has refcount {rc[p]}")
+    for p in range(1, n):
+        if rc[p] == 0 and p not in set(free):
+            bad.append(f"page {p} has refcount 0 but is not on the free list")
+        if rc[p] < 0:
+            bad.append(f"page {p} has negative refcount {rc[p]}")
+
+    # conservation
+    if pool.num_free + pool.num_used != n - 1:
+        bad.append(f"num_free ({pool.num_free}) + num_used ({pool.num_used})"
+                   f" != usable pages ({n - 1})")
+
+    tree_pages: list[int] = []
+    if radix is not None:
+        ps = radix.page_size
+        stack = [(radix.root, None, None)]
+        while stack:
+            node, parent, key = stack.pop()
+            if node is not radix.root:
+                tree_pages.append(node.page)
+                if not (0 < node.page < n):
+                    bad.append(f"radix node holds out-of-range page"
+                               f" {node.page}")
+                elif rc[node.page] < 1:
+                    bad.append(f"radix node holds page {node.page} with"
+                               f" refcount {rc[node.page]}")
+                if node.chunk is None or len(node.chunk) != ps:
+                    bad.append(f"radix node for page {node.page} has chunk"
+                               f" length {len(node.chunk or ())} != page_size")
+                if node.parent is not parent or key != node.chunk:
+                    bad.append(f"radix node for page {node.page} has"
+                               f" inconsistent parent/edge links")
+            for chunk, child in node.children.items():
+                stack.append((child, node, chunk))
+        if len(set(tree_pages)) != len(tree_pages):
+            bad.append("radix tree holds the same page in two nodes")
+        # evictable pages are a subset of tree-held rc == 1 pages
+        ev = radix.num_evictable()
+        cap = sum(1 for p in tree_pages if rc[p] == 1)
+        if ev > cap:
+            bad.append(f"num_evictable ({ev}) exceeds tree-only pages ({cap})")
+
+    if tables is not None:
+        held: dict[int, int] = {}
+        for t in tables:
+            for p in t:
+                p = int(p)
+                if p != 0:
+                    held[p] = held.get(p, 0) + 1
+        for p in set(tree_pages):
+            held[p] = held.get(p, 0) + 1
+        for p in range(1, n):
+            want = held.get(p, 0)
+            if rc[p] != want:
+                bad.append(f"page {p} refcount {rc[p]} != {want} references"
+                           f" (tables + radix tree)")
+    return bad

@@ -9,8 +9,7 @@
 """
 from __future__ import annotations
 
-import math
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import random
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

@@ -1,14 +1,11 @@
 """CGRA analytical simulator: paper claims C1-C4 hold in the model, plus
 tile-mapper invariants and quantization/compression correctness."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _prop import given, settings, st  # hypothesis, or deterministic fallback
 
-from repro.core.cgra import (CGRAConfig, MXU_DIM, block_shape,
-                             select_block_shapes, simulate_gemm,
-                             simulate_transformer_layer)
+from repro.core.cgra import (CGRAConfig, MXU_DIM, select_block_shapes,
+                             simulate_gemm, simulate_transformer_layer)
 from repro.core.quant import compress_grad, dequantize, quantize
 
 

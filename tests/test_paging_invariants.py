@@ -1,0 +1,115 @@
+"""Property checks for ``paging.check_invariants``: the structural
+invariants hold at every quiescent point of randomized allocate / share /
+publish / evict workloads, and ``num_evictable`` responds monotonically to
+external references."""
+import random
+
+import pytest
+
+from _prop import given, settings, st
+from repro.serving.paging import PagePool, RadixCache, check_invariants
+
+
+def assert_healthy(pool, radix=None, tables=None, step=""):
+    bad = check_invariants(pool, radix, tables)
+    assert bad == [], f"after {step}: {bad}"
+
+
+def _tokens(rng, n):
+    return [rng.randrange(50) for _ in range(n)]
+
+
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_invariants_hold_across_random_workloads(seed):
+    rng = random.Random(seed)
+    ps = 4
+    pool = PagePool(rng.randrange(6, 24))
+    radix = RadixCache(ps, pool)
+    tables: list[list[int]] = []
+    prompts: dict[int, list[int]] = {}  # id(table) -> its token prefix
+
+    for step in range(40):
+        op = rng.choice(["admit", "retire", "evict", "clear"])
+        if op == "admit":
+            n_pages = rng.randrange(1, 4)
+            toks = _tokens(rng, n_pages * ps)
+            m = radix.match(toks, max_match=len(toks) - 1)
+            for pid in m.full_pages:
+                pool.incref(pid)
+            fresh = []
+            need = n_pages - len(m.full_pages)
+            if pool.num_free + radix.num_evictable() >= need:
+                radix.evict(need)
+            for _ in range(need):
+                pid = pool.alloc()
+                if pid is None:
+                    break
+                fresh.append(pid)
+            table = list(m.full_pages) + fresh
+            if len(table) == n_pages:
+                # prefill "completed": publish the full pages
+                radix.insert(toks[: len(table) * ps], table)
+                tables.append(table)
+                prompts[id(table)] = toks
+            else:  # admission failed: roll back every reference taken
+                for pid in table:
+                    pool.decref(pid)
+        elif op == "retire" and tables:
+            table = tables.pop(rng.randrange(len(tables)))
+            prompts.pop(id(table))
+            for pid in table:
+                pool.decref(pid)
+        elif op == "evict":
+            radix.evict(rng.randrange(1, pool.n_pages))
+        elif op == "clear" and rng.random() < 0.2:
+            radix.clear()
+        assert_healthy(pool, radix, tables, f"step {step} ({op})")
+
+    for table in tables:
+        for pid in table:
+            pool.decref(pid)
+    radix.clear()
+    assert_healthy(pool, radix, [], "teardown")
+    assert pool.num_used == 0
+
+
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_num_evictable_monotone_under_external_refs(seed):
+    """An external reference on a tree page can only shrink the evictable
+    set; releasing it restores the count exactly."""
+    rng = random.Random(seed)
+    ps = 2
+    pool = PagePool(16)
+    radix = RadixCache(ps, pool)
+    pages = []
+    for _ in range(rng.randrange(2, 6)):
+        toks = _tokens(rng, rng.randrange(1, 4) * ps)
+        table = [pool.alloc() for _ in range(len(toks) // ps)]
+        radix.insert(toks, table)
+        pages.extend(table)
+        for pid in table:  # owner retires; only the tree holds the pages
+            pool.decref(pid)
+    tree_pages = [p for p in set(pages) if pool.refcount(p) == 1]
+    if not tree_pages:
+        return
+    ev0 = radix.num_evictable()
+    assert 0 < ev0 <= len(tree_pages)
+    pid = rng.choice(tree_pages)
+    pool.incref(pid)
+    ev1 = radix.num_evictable()
+    assert ev1 <= ev0
+    pool.decref(pid)
+    assert radix.num_evictable() == ev0
+    assert_healthy(pool, radix, [], "monotonicity probe")
+
+
+def test_trash_page_is_never_freed():
+    pool = PagePool(4)
+    with pytest.raises(AssertionError):
+        pool.decref(0)
+    for _ in range(3):
+        assert pool.alloc() != 0
+    assert pool.alloc() is None  # exhausted without ever touching page 0
+    assert_healthy(pool, step="exhaustion")

@@ -1,0 +1,72 @@
+"""Recompilation budget: the engine's executable cache must match the
+documented bound — chunked prefill compiles ONE mixed variant (``("mixed",
+chunk_tokens)``), unchunked prefill at most one per power-of-two bucket, and
+non-decomposable mixers one whole-prompt executable per distinct prompt
+length.  A shape leak into any traced argument (e.g. keying on chunk offset
+or prefix length) would show up here as extra cache entries."""
+import math
+
+import jax
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig
+
+EC = dict(page_size=16, max_batch=2, max_len=64, decode_chunk=2)
+
+
+def build(name, **kw):
+    cfg = reduce_config(get_config(name))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, EngineConfig(**EC, **kw))
+
+
+def jit_cache_size(fn):
+    get = getattr(fn, "_cache_size", None)
+    return get() if get is not None else None
+
+
+def serve(eng, lengths, max_new=3):
+    prompts = [[(7 * i + j) % eng.cfg.vocab_size for j in range(n)]
+               for i, n in enumerate(lengths)]
+    out, _ = eng.generate(prompts, max_new=max_new)
+    assert all(len(o) == n + max_new for o, n in zip(out, lengths))
+    return out
+
+
+def test_chunked_prefill_compiles_one_mixed_variant():
+    eng = build("olmo-1b", chunk_tokens=4)
+    serve(eng, [5, 9, 7, 12])
+    assert set(eng.runner.fns) == {("mixed", 4)}
+    cs = jit_cache_size(eng.runner.decode_fn)
+    if cs is not None:
+        assert cs == 1, "decode executable recompiled"
+
+
+def test_unchunked_prefill_buckets_power_of_two():
+    eng = build("olmo-1b", chunk_tokens=None)
+    serve(eng, [5, 9, 7])  # suffixes bucket to 8, 16, 8
+    keys = set(eng.runner.fns)
+    assert keys == {("mixed", 8), ("mixed", 16)}
+    for kind, C in keys:
+        assert kind == "mixed" and C & (C - 1) == 0
+    assert len(keys) <= int(math.log2(EC["max_len"])) + 1
+
+
+def test_whole_prefill_one_executable_per_length():
+    eng = build("mamba2-130m")  # SSM: not prefix-decomposable
+    serve(eng, [5, 5, 7])
+    assert set(eng.runner.fns) == {("whole", 5), ("whole", 7)}
+    cs = jit_cache_size(eng.runner.decode_fn)
+    if cs is not None:
+        assert cs == 1
+
+
+def test_repeat_traffic_adds_no_variants():
+    eng = build("olmo-1b", chunk_tokens=4)
+    serve(eng, [6, 10])
+    before = dict(eng.runner.fns)
+    serve(eng, [10, 6, 8])
+    assert set(eng.runner.fns) == set(before)
+    for key, fn in eng.runner.fns.items():
+        assert fn is before[key], f"{key} was rebuilt"

@@ -1,7 +1,5 @@
 """Fault tolerance: checkpoint/restart, failure injection, straggler
 monitor, elastic reshard-on-load."""
-import os
-import time
 
 import jax
 import jax.numpy as jnp
