@@ -17,6 +17,10 @@ Workloads:
   prefill head-of-line-blocks every in-flight decode for its whole
   duration (an ITL spike); chunked, it streams through the mixed step 32
   tokens per tick and decodes keep flowing.
+- mesh scaling: re-execs itself with 8 forced host devices and measures
+  closed-batch tokens/s plus compiled-HLO bytes-accessed-per-decode-token
+  at mesh widths 1/2/4/8 (host-CPU shards share the physical core pool, so
+  bytes moved — not tokens/s — is the scaling signal).
 
 ``--json PATH`` additionally dumps the headline numbers (tokens/s, prefix
 hit rate, concurrency at fixed memory, goodput/TTFT/ITL chunked vs
@@ -155,6 +159,66 @@ def bench_prefix_reuse(cfg, params, n_req=8, prefix_len=512, suffix_len=8,
     return out
 
 
+def bench_mesh_child(arch: str) -> dict:
+    """Runs inside the 8-forced-device subprocess: closed-batch throughput
+    and compiled decode bytes-per-token at mesh widths 1/2/4/8."""
+    from repro.serving import MeshSpec
+    cfg = reduce_config(get_config(arch))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = make_workload(cfg, n=4)
+    out = {"devices": jax.device_count(), "widths": {}}
+    for m in (1, 2, 4, 8):
+        if m > jax.device_count():
+            continue
+        eng = Engine(cfg, params, EngineConfig(
+            max_len=256, max_batch=4, decode_chunk=4,
+            mesh=None if m == 1 else MeshSpec(1, m)))
+        eng.generate(prompts, max_new=8)                 # warm (compile)
+        t0 = time.time()
+        _, stats = eng.generate(prompts, max_new=MAX_NEW)
+        wall = time.time() - t0
+        runner, sched = eng.runner, eng.sched
+        lowered = runner.decode_fn.lower(
+            runner.params, runner.caches, jnp.asarray(sched.pages),
+            jnp.asarray(sched.cur), jnp.asarray(sched.pos),
+            jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
+            jnp.asarray(sched.keys))
+        ca = lowered.compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):               # older jax spelling
+            ca = ca[0] if ca else {}
+        toks_per_call = eng.config.decode_chunk * eng.config.max_batch
+        out["widths"][str(m)] = dict(
+            decode_tokens_per_s=round(stats.tokens_per_s, 2),
+            end_to_end_tokens_per_s=round(4 * MAX_NEW / wall, 2),
+            decode_bytes_per_token=round(
+                float(ca.get("bytes accessed", 0.0)) / toks_per_call),
+        )
+    return out
+
+
+def bench_mesh_scaling(arch: str) -> dict:
+    """Re-exec this script with 8 forced host devices (the parent process
+    must keep its single-device view) and collect the child's JSON."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        res = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mesh-child",
+             "--arch", arch],
+            env=env, capture_output=True, text=True, timeout=1200)
+        if res.returncode != 0:
+            return {"error": (res.stderr or res.stdout)[-500:]}
+        return json.loads(res.stdout.strip().splitlines()[-1])
+    except (subprocess.TimeoutExpired, json.JSONDecodeError, OSError) as e:
+        return {"error": repr(e)}
+
+
 def _pctl(xs, q):
     xs = sorted(xs)
     return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
@@ -254,6 +318,24 @@ def run(arch: str = "olmo-1b", slo_ttft_s: float = 2.0,
                f"hit_rate={pr['radix']['hit_rate']:.2f} | no_share "
                f"max_concurrent={pr['no_share']['max_concurrent']}")
 
+    ms = bench_mesh_scaling(arch)
+    if "error" in ms:
+        out.append(f"mesh scaling: skipped ({ms['error'][:120]})")
+    else:
+        out.append(f"mesh scaling (8 forced host devices, 1xM model-parallel, "
+                   f"4 reqs x {MAX_NEW} new tokens; bytes from compiled "
+                   f"decode HLO cost analysis):")
+        out.append("  mesh,decode_tok_s,end_to_end_tok_s,decode_bytes_per_tok")
+        for m, row in sorted(ms["widths"].items(), key=lambda kv: int(kv[0])):
+            out.append(f"  1x{m},{row['decode_tokens_per_s']},"
+                       f"{row['end_to_end_tokens_per_s']},"
+                       f"{row['decode_bytes_per_token']}")
+        out.append("derived: host-CPU mesh widths share one physical core "
+                   "pool, so tokens/s measures sharding overhead, not "
+                   "speedup; bytes-per-token is the real signal (per-device "
+                   "weight traffic should fall as 1/M for the sharded "
+                   "projections)")
+
     blob = dict(
         arch=cfg.name,
         decode_tokens_per_s=round(cb_stats.tokens_per_s, 2),
@@ -275,6 +357,7 @@ def run(arch: str = "olmo-1b", slo_ttft_s: float = 2.0,
         unchunked_ttft_p99_s=round(gp["unchunked"]["ttft_p99"], 4),
         unchunked_itl_p99_s=round(gp["unchunked"]["itl_p99"], 4),
         unchunked_goodput_frac=round(gp["unchunked"]["goodput_frac"], 4),
+        mesh_scaling=ms,
     )
     return out, blob
 
@@ -288,7 +371,12 @@ def main():
                     help="time-to-first-token SLO (s) for goodput")
     ap.add_argument("--slo-itl", type=float, default=0.25,
                     help="inter-token-latency SLO (s) for goodput")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: 8-device re-exec
     args = ap.parse_args()
+    if args.mesh_child:
+        print(json.dumps(bench_mesh_child(args.arch)))
+        return
     lines, blob = run(args.arch, slo_ttft_s=args.slo_ttft,
                       slo_itl_s=args.slo_itl)
     print("\n".join(lines))

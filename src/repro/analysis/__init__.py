@@ -7,15 +7,17 @@ for the machine-readable list."""
 from repro.analysis.bounds import check_kernel_spec
 from repro.analysis.donation import check_donation
 from repro.analysis.findings import RULES, Finding, Report
+from repro.analysis.hlo_lints import lint_hlo, param_gather_shapes
 from repro.analysis.jaxpr_lints import (check_logits_dtype, iter_jaxprs,
                                         lint_jaxpr)
 from repro.analysis.runner import (MODES, QUANTS, analysis_config, check_cell,
-                                   check_kernels, check_paging, run_analysis)
+                                   check_kernels, check_paging, check_sharded,
+                                   run_analysis)
 
 __all__ = [
     "RULES", "Finding", "Report",
     "check_kernel_spec", "check_donation", "check_logits_dtype",
-    "iter_jaxprs", "lint_jaxpr",
+    "iter_jaxprs", "lint_jaxpr", "lint_hlo", "param_gather_shapes",
     "MODES", "QUANTS", "analysis_config", "check_cell", "check_kernels",
-    "check_paging", "run_analysis",
+    "check_paging", "check_sharded", "run_analysis",
 ]

@@ -23,6 +23,9 @@ RULES: Dict[str, str] = {
             "executable",
     "J006": "logit round trip: model entry returns logits in a dtype "
             "narrower than f32 (sampler upcasts quantized values)",
+    "J007": "sharded-surface hazard: compiled SPMD module all-gathers a "
+            "full parameter (sharding constraint undone downstream) or "
+            "moves data device-to-host mid-executable",
     "D001": "dead donation: donated input buffer matches no output buffer "
             "(donation silently dropped)",
     "D002": "duplicate donation: more donated buffers of a (shape, dtype) "

@@ -1,0 +1,90 @@
+"""Compiled-HLO lints (rule J007): sharded-surface hazards.
+
+All-gathers do not exist in jaxprs — the SPMD partitioner materializes
+them during compilation — so this checker works on the compiled module's
+HLO text instead.  Two hazards are flagged:
+
+* an ``all-gather`` whose result shape matches a parameter leaf (or the
+  per-layer slice of a stacked parameter): the placement sharded the
+  weight, but a downstream consumer's sharding constraint forces XLA to
+  reassemble the full tensor on every device, silently erasing the
+  memory/bandwidth win of tensor parallelism;
+* a device-to-host transfer (``outfeed``/``infeed`` ops or
+  ``SendToHost``-family custom-calls) inside the module — serving
+  executables must stay resident on device.
+
+The functions are pure text + shapes, so they are unit-testable without
+a multi-device backend; the runner feeds them real compiled modules when
+more than one device is present.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Iterable, List, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# parameter all-gathers below this many elements are ignored: tiny
+# tensors are cheap to regather and their shapes collide with
+# activations, producing false positives
+GATHER_ELEMS_THRESHOLD = 4096
+
+_HOST_TARGETS = ("SendToHost", "RecvFromHost", "MoveToHost", "MoveToDevice")
+
+# `  %all-gather.3 = f32[2,64,256]{2,1,0} all-gather(...)` -> "2,64,256"
+_ALL_GATHER_RE = re.compile(r"=\s*[a-z0-9]+\[([0-9,]*)\]\S*\s+all-gather")
+_CUSTOM_CALL_RE = re.compile(r'custom_call_target="([^"]+)"')
+_HOST_OP_RE = re.compile(r"=\s*\S+\s+(outfeed|infeed)\(")
+
+
+def param_gather_shapes(params: Any) -> Set[Tuple[int, ...]]:
+    """Shapes whose appearance as an all-gather result means a full
+    parameter was reassembled: each leaf's shape, plus the per-layer
+    slice of stacked (``[L, ...]``) leaves."""
+    import jax
+
+    shapes: Set[Tuple[int, ...]] = set()
+    for leaf in jax.tree.leaves(params):
+        shp = tuple(getattr(leaf, "shape", ()) or ())
+        for cand in (shp,) + ((shp[1:],) if len(shp) >= 3 else ()):
+            if cand and math.prod(cand) >= GATHER_ELEMS_THRESHOLD:
+                shapes.add(cand)
+    return shapes
+
+
+def lint_hlo(hlo_text: str, shapes: Iterable[Sequence[int]],
+             context: str = "") -> List[Finding]:
+    """Run rule J007 over one compiled module's HLO text."""
+    out: List[Finding] = []
+    suspicious = {tuple(s) for s in shapes}
+    seen_gathers: Set[Tuple[int, ...]] = set()
+    seen_hosts: Set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _ALL_GATHER_RE.search(line)
+        if m:
+            dims = tuple(int(d) for d in m.group(1).split(",") if d)
+            if dims in suspicious and dims not in seen_gathers:
+                seen_gathers.add(dims)
+                out.append(Finding(
+                    "J007",
+                    f"all-gather reassembles a full parameter of shape "
+                    f"{dims} — a downstream sharding constraint undoes "
+                    f"the weight's placement; shard the consumer or "
+                    f"replicate the weight at placement instead", context))
+        cm = _CUSTOM_CALL_RE.search(line)
+        if cm and any(t in cm.group(1) for t in _HOST_TARGETS) \
+                and cm.group(1) not in seen_hosts:
+            seen_hosts.add(cm.group(1))
+            out.append(Finding(
+                "J007",
+                f"device-to-host transfer custom-call '{cm.group(1)}' "
+                f"inside a compiled serving module", context))
+        hm = _HOST_OP_RE.search(line)
+        if hm and hm.group(1) not in seen_hosts:
+            seen_hosts.add(hm.group(1))
+            out.append(Finding(
+                "J007",
+                f"host-transfer op '{hm.group(1)}' inside a compiled "
+                f"serving module", context))
+    return out

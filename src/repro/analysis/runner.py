@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.analysis.bounds import check_kernel_spec
 from repro.analysis.donation import check_donation
 from repro.analysis.findings import Finding, Report
+from repro.analysis.hlo_lints import lint_hlo, param_gather_shapes
 from repro.analysis.jaxpr_lints import check_logits_dtype, lint_jaxpr
 from repro.configs import REGISTRY, get_config, reduce_config
 from repro.models import model as M
@@ -156,6 +157,78 @@ def check_cell(name: str, mode: str, quant: str, report: Report,
                               f"cross-attn prefill needs images)")
 
 
+def check_sharded(name: str, report: Report, params=None) -> None:
+    """Sharded-surface checks (J007 + the J/D rules on mesh traces).
+
+    Builds the engine on a ``1xT`` model-parallel mesh over the host's
+    devices, traces the serving executables with the mesh context active
+    (so the jaxprs carry the real sharding constraints), and compiles the
+    decode and prefill executables to run the J007 HLO lint — all-gathers
+    only exist after SPMD partitioning, so the jaxpr rules cannot see
+    them.  Reference mode / no quant only: kernel modes share the same
+    placement code, and the compiled-module check is about *sharding*,
+    not kernel internals.  Skipped (with a note) on single-device hosts;
+    the multi-device CI lane forces 8 host devices."""
+    dc = jax.device_count()
+    cfg = analysis_config(name, "reference", "none")
+    if cfg.kind != "decoder":
+        return
+    if dc < 2:
+        report.checked.append(
+            f"config={name} sharded surfaces (skipped: 1 device; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+    tp = 8 if dc >= 8 else (4 if dc >= 4 else 2)
+    base = f"config={name} mesh=1x{tp}"
+    if params is None:
+        params = M.init(cfg, jax.random.PRNGKey(0))
+
+    eng = Engine(cfg, params, EngineConfig(kernel_mode="reference",
+                                           quant="none", mesh=f"1x{tp}",
+                                           **_ENGINE))
+    runner, npp = eng.runner, eng.npp
+    caches = runner.caches
+    pages = jnp.zeros((_B, npp), jnp.int32)
+    cur = jnp.zeros(_B, jnp.int32)
+    pos = jnp.zeros(_B, jnp.int32)
+    remaining = jnp.zeros(_B, jnp.int32)
+    temp = jnp.zeros(_B, jnp.float32)
+    keys = jnp.zeros((_B, 2), jnp.uint32)
+    shapes = param_gather_shapes(runner.params)
+
+    dec_args = (runner.params, caches, pages, cur, pos, remaining, temp, keys)
+    _lint_entry(report, runner._traced(runner._decode_chunk), dec_args,
+                f"{base} entry=decode", donate=(1,))
+    hlo = runner.decode_fn.lower(*dec_args).compile().as_text()
+    report.extend(lint_hlo(hlo, shapes, f"{base} entry=decode hlo"))
+    report.checked.append(f"{base} entry=decode hlo")
+
+    if eng.sched.chunked:
+        C = 8
+        mixed_args = (runner.params, caches, jnp.zeros((1, C), jnp.int32),
+                      pages[:1], jnp.int32(0), jnp.int32(C), jnp.float32(0.0),
+                      keys[0], pages, cur, pos, remaining, temp, keys)
+        _lint_entry(report, runner._traced(runner._mixed), mixed_args,
+                    f"{base} entry=mixed", donate=(1,))
+        hlo = runner.mixed_fn(C, 1).lower(*mixed_args).compile().as_text()
+        report.extend(lint_hlo(hlo, shapes, f"{base} entry=mixed hlo"))
+        report.checked.append(f"{base} entry=mixed hlo")
+    elif all(sp.mixer != "cross" for sp in eng.cfg.layer_specs()):
+        n = 8
+        wp_args = (runner.params, caches, jnp.zeros((1, n), jnp.int32),
+                   jnp.zeros(npp, jnp.int32), jnp.int32(0), jnp.float32(0.0),
+                   keys[0])
+        _lint_entry(report,
+                    runner._traced(functools.partial(runner._whole_prefill,
+                                                     n)),
+                    wp_args, f"{base} entry=whole_prefill", donate=(1,))
+        hlo = runner.whole_prefill_fn(n, 1).lower(*wp_args).compile() \
+                    .as_text()
+        report.extend(lint_hlo(hlo, shapes, f"{base} entry=whole_prefill "
+                                            f"hlo"))
+        report.checked.append(f"{base} entry=whole_prefill hlo")
+
+
 def check_kernels(name: str, report: Report) -> None:
     """K-rule bounds proofs for every kernel the config can reach.
 
@@ -257,5 +330,8 @@ def run_analysis(configs: Optional[Sequence[str]] = None,
         if progress:
             progress(f"kernel bounds {name}")
         check_kernels(name, report)
+        if progress and jax.device_count() >= 2:
+            progress(f"sharded surfaces {name}")
+        check_sharded(name, report, params=params)
     check_paging(report)
     return report

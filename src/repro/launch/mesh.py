@@ -12,6 +12,10 @@ which is exactly what the paper's switchless-torus schedules
 """
 from __future__ import annotations
 
+import math
+
+import numpy as np
+
 import jax
 
 try:  # older jax releases have no AxisType / axis_types kwarg
@@ -20,10 +24,45 @@ except ImportError:
     AxisType = None
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, shape=None, axes=None):
+    """The pod-scale mesh — validated against the platform's actual device
+    count instead of assuming a 256-chip pod.  Pass ``shape=``/``axes=`` for
+    a small dev mesh (e.g. ``shape=(1, 8)`` on a forced-8-device CPU)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    elif axes is None:
+        axes = ("pod", "data", "model")[-len(tuple(shape)):]
+    n = math.prod(shape)
+    avail = jax.device_count()
+    if n != avail:
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {n} devices but the platform "
+            f"has {avail}; pass shape=/axes= matching the device count "
+            f"(e.g. shape=(1, {avail})), or use make_device_mesh to take a "
+            f"submesh of the available devices")
     return make_mesh(shape, axes)
+
+
+def make_device_mesh(shape, axes, devices=None):
+    """Mesh over the *first* ``prod(shape)`` devices.
+
+    Unlike ``jax.make_mesh`` this does not require using every device on the
+    platform — the serving engine's ``MeshSpec`` builds small dev meshes
+    ((1, 2), (1, 4), ...) on a forced-8-device CPU this way."""
+    devices = list(jax.devices() if devices is None else devices)
+    n = math.prod(shape)
+    if len(devices) < n:
+        raise ValueError(f"mesh shape {tuple(shape)} needs {n} devices; "
+                         f"only {len(devices)} available")
+    arr = np.asarray(devices[:n]).reshape(tuple(shape))
+    if AxisType is None:
+        return jax.sharding.Mesh(arr, tuple(axes))
+    try:
+        return jax.sharding.Mesh(arr, tuple(axes),
+                                 axis_types=(AxisType.Auto,) * len(axes))
+    except TypeError:  # Mesh without the axis_types kwarg
+        return jax.sharding.Mesh(arr, tuple(axes))
 
 
 def make_mesh(shape, axes):

@@ -50,6 +50,12 @@ def main():
     ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
                     help="w8a8: int8-quantize weights at load and serve "
                          "through the packed int8 GEMM kernels")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve mesh-sharded over the first D*M devices "
+                         "(data x model, e.g. '1x8'; a bare 'M' means "
+                         "model-parallel only).  Params/KV pools are placed "
+                         "with NamedSharding; MoE configs route experts "
+                         "across the model axis")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch)) if args.reduced \
@@ -59,7 +65,7 @@ def main():
         max_len=args.max_len, max_batch=args.batch, page_size=args.page_size,
         n_pages=args.pages, prefix_cache=not args.no_prefix_cache,
         chunk_tokens=args.chunk_tokens,
-        kernel_mode=args.kernel_mode, quant=args.quant))
+        kernel_mode=args.kernel_mode, quant=args.quant, mesh=args.mesh))
 
     rng = np.random.RandomState(0)
     prompts = [bytes_tokenizer_encode(f"request {i}: " + "x" * rng.randint(4, 40),

@@ -137,6 +137,30 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 
 
+def tp_size(mesh: Mesh | None = None) -> int:
+    """Size of the tensor-parallel (`model`) axis; 1 when no mesh is active."""
+    mesh = mesh if mesh is not None else _ACT_MESH.get()
+    if mesh is None:
+        return 1
+    return dict(mesh.shape).get("model", 1)
+
+
+def tp_shard_map(body, mesh: Mesh, in_specs, out_specs, axis: str = "model"):
+    """Partial-manual ``shard_map`` over the tensor-parallel axis only.
+
+    Other mesh axes (data/pod) stay under the auto partitioner, so callers
+    can spell specs purely in terms of ``model``.  Used for Pallas kernels
+    (which have no SPMD partitioning rules — each shard runs the unmodified
+    kernel on its slice) and the MoE expert-parallel block."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6 spelling
+        return jax.shard_map(body, mesh=mesh, axis_names={axis},
+                             in_specs=in_specs, out_specs=out_specs)
+    from repro.core.torus import shard_map as _shmap
+    auto = frozenset(mesh.axis_names) - {axis}
+    return _shmap(body, mesh=mesh, auto=auto, check_rep=False,
+                  in_specs=in_specs, out_specs=out_specs)
+
+
 def batch_pspec(mesh: Mesh, batch_dim_divisor: int = 0) -> P:
     axes = tuple(a for a in BATCH_AXES if a in mesh.shape)
     return P(axes if len(axes) > 1 else (axes[0] if axes else None))

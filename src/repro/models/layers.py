@@ -30,7 +30,7 @@ from repro.core.gemm import cgra_gemm, cgra_gemm_w8a8
 from repro.core.quant import QTensor
 from repro.kernels.ops import attend_decode as kernel_attend_decode
 from repro.kernels.ops import attention as kernel_attention
-from repro.launch.sharding import constrain, current_mesh
+from repro.launch.sharding import constrain, current_mesh, tp_shard_map
 from repro.models.params import ParamSpec
 
 F32 = jnp.float32
@@ -59,7 +59,47 @@ ATTN_STUB: contextvars.ContextVar = contextvars.ContextVar("attn_stub",
 # ---------------------------------------------------------------------------
 
 
-def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = (), out_dtype=None):
+def _tp_mesh(cfg):
+    """(mesh, tp) when Pallas kernel calls must run per-shard under
+    ``shard_map``: an activation mesh is active at trace time and
+    ``cfg.kernel_mode`` routes through ``pallas_call`` (which has no SPMD
+    partitioning rules — the reference jnp paths partition under XLA's auto
+    partitioner and need none of this)."""
+    mesh = current_mesh()
+    if mesh is None or cfg.kernel_mode == "reference":
+        return None, 1
+    tp = dict(mesh.shape).get("model", 1)
+    return (mesh, tp) if tp > 1 else (None, 1)
+
+
+def _tp_gemm(mesh, tp, gemm, x, w, shard):
+    """One GEMM under ``shard_map`` on the `model` axis.
+
+    ``shard=("col", blocks)``: w [K, N] split on N into ``blocks`` logical
+    column blocks (head / ffn / vocab units) — each device computes its
+    output slice, no collective.  ``shard=("row", blocks)``: x/w split on the
+    contraction dim K, partial GEMMs summed with an f32 psum (16-bit
+    all-reduces trip an XLA CPU promotion-pass bug; see _moe_expert_block).
+    Anything else (no hint, or ``blocks % tp != 0`` — matching the
+    divisibility fallback that left the weight replicated): every device
+    runs the whole GEMM replicated."""
+    from jax.sharding import PartitionSpec as P
+    nd = x.ndim
+    kind, blocks = shard if shard else (None, 0)
+    if kind == "col" and blocks % tp == 0:
+        out_spec = P(*([None] * (nd - 1) + ["model"]))
+        return tp_shard_map(gemm, mesh, (P(), P(None, "model")), out_spec)(x, w)
+    if kind == "row" and blocks % tp == 0:
+        def body(xs, ws):
+            o = gemm(xs, ws)
+            return lax.psum(o.astype(F32), "model").astype(o.dtype)
+        x_spec = P(*([None] * (nd - 1) + ["model"]))
+        return tp_shard_map(body, mesh, (x_spec, P("model", None)), P())(x, w)
+    return tp_shard_map(gemm, mesh, (P(), P()), P())(x, w)
+
+
+def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = (), out_dtype=None,
+               shard: tuple | None = None):
     """x: [..., K] @ w -> [..., N] (or [..., *out_shape] with N = prod).
 
     ``w`` is either a float weight whose dims reshape row-major to [K, N]
@@ -68,15 +108,31 @@ def dense_proj(cfg: ArchConfig, x, w, out_shape: tuple = (), out_dtype=None):
     quantization of that same [K, N] reshape.  ``out_dtype`` overrides the
     store dtype of the accumulator (default: the compute dtype) — the
     logits head requests f32 so full precision survives to the sampler.
+
+    ``shard=("col"|"row", blocks)`` is the tensor-parallel hint, used only
+    when a mesh is active *and* the GEMM routes through Pallas (see
+    ``_tp_gemm``); it must mirror how ``resolve_pspec`` placed the weight —
+    "col" for output-dim sharding (wq/wk/wv/w_gate/w_up/lm_head), "row" for
+    contraction-dim sharding (wo/w_down), ``blocks`` the logical unit count
+    (heads / kv_heads / d_ff / padded_vocab) whose divisibility by tp gates
+    the sharding.  QTensor weights are always placed replicated under a mesh
+    (see ``model.shard_params``), so they take the replicated path.
     """
     Kdim = x.shape[-1]
+    mesh, tp = _tp_mesh(cfg)
     if isinstance(w, QTensor):
         w2 = QTensor(w.q.reshape(Kdim, -1), w.scale.reshape(1, -1))
-        out = cgra_gemm_w8a8(x, w2, mode=cfg.kernel_mode,
-                             out_dtype=out_dtype or cfg.compute_dtype)
+        gemm = functools.partial(cgra_gemm_w8a8, mode=cfg.kernel_mode,
+                                 out_dtype=out_dtype or cfg.compute_dtype)
+        shard = None  # int8 TP would re-quantize activations per shard
     else:
         w2 = w.reshape(Kdim, -1).astype(cfg.compute_dtype)
-        out = cgra_gemm(x, w2, mode=cfg.kernel_mode, out_dtype=out_dtype)
+        gemm = functools.partial(cgra_gemm, mode=cfg.kernel_mode,
+                                 out_dtype=out_dtype)
+    if mesh is not None:
+        out = _tp_gemm(mesh, tp, gemm, x, w2, shard)
+    else:
+        out = gemm(x, w2)
     if out_shape:
         out = out.reshape(*out.shape[:-1], *out_shape)
     return out
@@ -104,10 +160,21 @@ def dispatch_attend(cfg: ArchConfig, q, k, v, q_pos, k_pos, *, causal: bool,
     if cfg.kernel_mode == "reference" or ATTN_STUB.get():
         return attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
                       chunk=chunk, softcap=softcap)
-    o = kernel_attention(
-        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3), causal=causal, window=window,
-        softcap=softcap, mode=cfg.kernel_mode)
+    call = functools.partial(kernel_attention, causal=causal, window=window,
+                             softcap=softcap, mode=cfg.kernel_mode)
+    qT, kT, vT = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    mesh, tp = _tp_mesh(cfg)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        # per-device head shards keep the GQA fold intact (H/tp queries over
+        # K/tp KV heads, same group size); non-divisible head counts fall
+        # back to every device running the whole kernel replicated
+        hs = "model" if (qT.shape[1] % tp == 0 and kT.shape[1] % tp == 0) \
+            else None
+        spec = P(None, hs, None, None)
+        o = tp_shard_map(call, mesh, (spec, spec, spec), spec)(qT, kT, vT)
+    else:
+        o = call(qT, kT, vT)
     return o.transpose(0, 2, 1, 3)
 
 
@@ -128,10 +195,29 @@ def dispatch_attend_decode(cfg: ArchConfig, q, k, v, pos, start, *,
     switches k/v to page pools indirected through the per-slot page table.
     Routes to the jnp oracle (``reference``) or the flash-decode Pallas
     kernel (``interpret`` | ``pallas``), which streams only live k-blocks.
+    Under a mesh the kernel runs per-KV-head-shard inside ``shard_map``
+    (page tables / validity bounds replicated, head fold untouched — each
+    shard keeps its full query groups); MLA's fused single-KV-head pool and
+    other non-divisible head counts run replicated.
     """
-    o = kernel_attend_decode(q[:, 0], k, v, pos, start, layout=layout,
+    q0 = q[:, 0]
+    call = functools.partial(kernel_attend_decode, layout=layout,
                              softcap=softcap, scale=scale, dv=dv,
-                             pages=pages, mode=cfg.kernel_mode)
+                             mode=cfg.kernel_mode)
+    mesh, tp = _tp_mesh(cfg)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        hs = "model" if (q0.shape[1] % tp == 0 and k.shape[-2] % tp == 0) \
+            else None
+        qspec = P(None, hs, None)            # q [B, H, dq]
+        kvspec = P(None, None, hs, None)     # [B, S, K, d] or pool [P, ps, K, d]
+        body = lambda qq, kk, vv, pp, ss, pg: call(qq, kk, vv, pp, ss, pages=pg)
+        o = tp_shard_map(
+            body, mesh,
+            (qspec, kvspec, kvspec, P(None), P(None), P(None, None)),
+            qspec)(q0, k, v, pos, start, pages)
+    else:
+        o = call(q0, k, v, pos, start, pages=pages)
     return o[:, None]
 
 
@@ -289,9 +375,9 @@ def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict:
 
 def _qkv(cfg, p, xq, xkv):
     H, K, dh = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
-    q = dense_proj(cfg, xq, p["wq"], (H, dh))
-    k = dense_proj(cfg, xkv, p["wk"], (K, dh))
-    v = dense_proj(cfg, xkv, p["wv"], (K, dh))
+    q = dense_proj(cfg, xq, p["wq"], (H, dh), shard=("col", H))
+    k = dense_proj(cfg, xkv, p["wk"], (K, dh), shard=("col", K))
+    v = dense_proj(cfg, xkv, p["wv"], (K, dh), shard=("col", K))
     if "q_norm" in p:
         q = rms_only(q, p["q_norm"])
         k = rms_only(k, p["k_norm"])
@@ -317,7 +403,8 @@ def attn_forward(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
                         window=window, chunk=attn_chunk,
                         softcap=cfg.logit_softcap)
     o = constrain(o, ("batch", None, "heads", None))
-    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                      shard=("row", cfg.padded_heads))
 
 
 def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int, local: bool) -> dict:
@@ -377,7 +464,8 @@ def attn_prefill(cfg: ArchConfig, p: dict, x, positions, *, local: bool,
     o = dispatch_attend(cfg, q, k_all, v_all, positions, k_pos, causal=True,
                         window=window, chunk=attn_chunk,
                         softcap=cfg.logit_softcap)
-    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                     shard=("row", cfg.padded_heads))
     if window and not full_cache and past_kv is None and k.shape[1] > window:
         # ring-buffer cache: keep the last `window` keys, rolled so entry
         # (pos % window) holds absolute position pos — decode continues the
@@ -444,13 +532,28 @@ def attn_chunk_prefill(cfg: ArchConfig, p: dict, cache: dict, x, positions, *,
     k = _page_rows_write(cache["k"], k_new, pages, pos0, chunk_len)
     v = _page_rows_write(cache["v"], v_new, pages, pos0, chunk_len)
     window = cfg.window_size if local else 0
-    o = kernel_attention(
-        q.transpose(0, 2, 1, 3), k, v, pages=pages, q_start=pos0,
-        k_len=pos0 + chunk_len, window=window, softcap=cfg.logit_softcap,
-        mode=cfg.kernel_mode)
+    call = functools.partial(kernel_attention, window=window,
+                             softcap=cfg.logit_softcap, mode=cfg.kernel_mode)
+    qT = q.transpose(0, 2, 1, 3)
+    mesh, tp = _tp_mesh(cfg)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        hs = "model" if (qT.shape[1] % tp == 0 and k.shape[2] % tp == 0) \
+            else None
+        body = lambda qq, kk, vv, pg, qs, kl: call(qq, kk, vv, pages=pg,
+                                                   q_start=qs, k_len=kl)
+        o = tp_shard_map(
+            body, mesh,
+            (P(None, hs, None, None), P(None, None, hs, None),
+             P(None, None, hs, None), P(None, None), P(None), P(None)),
+            P(None, hs, None, None))(qT, k, v, pages, pos0,
+                                     pos0 + chunk_len)
+    else:
+        o = call(qT, k, v, pages=pages, q_start=pos0, k_len=pos0 + chunk_len)
     o = o.transpose(0, 2, 1, 3)
     o = constrain(o, ("batch", None, "heads", None))
-    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                     shard=("row", cfg.padded_heads))
     return out, {"k": k, "v": v}
 
 
@@ -508,7 +611,7 @@ def attn_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, local: bool,
             softcap=cfg.logit_softcap)
     H = q.shape[2]
     o = o.reshape(B, 1, H * v.shape[-1])
-    out = dense_proj(cfg, o, p["wo"])
+    out = dense_proj(cfg, o, p["wo"], shard=("row", cfg.padded_heads))
     return out, {"k": k, "v": v}
 
 
@@ -534,7 +637,8 @@ def mla_specs(cfg: ArchConfig) -> dict:
 def _mla_q(cfg, p, x, positions):
     dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
     cq = rms_only(dense_proj(cfg, x, p["wq_a"]), p["q_norm"])
-    q = dense_proj(cfg, cq, p["wq_b"], (cfg.padded_heads, dn + dr))
+    q = dense_proj(cfg, cq, p["wq_b"], (cfg.padded_heads, dn + dr),
+                   shard=("col", cfg.padded_heads))
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope
@@ -553,7 +657,8 @@ def mla_forward(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
     dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
     q_nope, q_rope = _mla_q(cfg, p, x, positions)
     latent, k_rope = _mla_latent(cfg, p, x, positions)
-    kv = dense_proj(cfg, latent, p["wkv_b"], (cfg.padded_heads, dn + dv))
+    kv = dense_proj(cfg, latent, p["wkv_b"], (cfg.padded_heads, dn + dv),
+                    shard=("col", cfg.padded_heads))
     k_nope, v = kv[..., :dn], kv[..., dn:]
     H = k_nope.shape[2]
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, k_rope.shape[-1]))
@@ -562,7 +667,8 @@ def mla_forward(cfg: ArchConfig, p: dict, x, positions, attn_chunk: int = 0):
     # MLA stays on the jnp attend core: q/k head dim (dn+dr) != v head dim
     o = attend(q, k, v, positions, positions, causal=(cfg.kind == "decoder"),
                chunk=attn_chunk)
-    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    return dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                      shard=("row", cfg.padded_heads))
 
 
 def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
@@ -628,7 +734,8 @@ def mla_decode(cfg: ArchConfig, p: dict, cache: dict, x, pos, *, pages=None):
         pages=pages, scale=(dn + cfg.qk_rope_dim) ** -0.5, dv=kvr)
     o = jnp.einsum("bshr,rhd->bshd", o_lat, wv,  # expand to v space
                    preferred_element_type=F32).astype(o_lat.dtype)
-    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    out = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                     shard=("row", cfg.padded_heads))
     return out, {"kv": kv}
 
 
@@ -647,19 +754,20 @@ def cross_attn(cfg: ArchConfig, p: dict, x, img, img_kv=None):
     Returns (out, (k, v)) so decode can reuse the static cross KV."""
     H, K, dh = cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
     if img_kv is None:
-        k = dense_proj(cfg, img, p["wk"], (K, dh))
-        v = dense_proj(cfg, img, p["wv"], (K, dh))
+        k = dense_proj(cfg, img, p["wk"], (K, dh), shard=("col", K))
+        v = dense_proj(cfg, img, p["wv"], (K, dh), shard=("col", K))
         if "q_norm" in p:
             k = rms_only(k, p["k_norm"])
     else:
         k, v = img_kv
-    q = dense_proj(cfg, x, p["wq"], (H, dh))
+    q = dense_proj(cfg, x, p["wq"], (H, dh), shard=("col", H))
     if "q_norm" in p:
         q = rms_only(q, p["q_norm"])
     Sq, T = q.shape[1], k.shape[1]
     o = dispatch_attend(cfg, q, k, v, jnp.arange(Sq), jnp.arange(T),
                         causal=False)
-    o = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"])
+    o = dense_proj(cfg, o.reshape(*o.shape[:-2], -1), p["wo"],
+                   shard=("row", H))
     return jnp.tanh(p["gate"].astype(F32)).astype(o.dtype) * o, (k, v)
 
 
@@ -690,14 +798,15 @@ def ffn_specs(cfg: ArchConfig) -> dict:
 def ffn_forward(cfg: ArchConfig, p: dict, x):
     dt = cfg.compute_dtype
     kind = ffn_kind(cfg)
+    Fdim = cfg.d_ff
     if kind == "gelu_mlp":
-        h = dense_proj(cfg, x, p["w1"]) + p["b1"].astype(dt)
+        h = dense_proj(cfg, x, p["w1"], shard=("col", Fdim)) + p["b1"].astype(dt)
         h = jax.nn.gelu(h)
-        return dense_proj(cfg, h, p["w2"]) + p["b2"].astype(dt)
-    g = dense_proj(cfg, x, p["w_gate"])
-    u = dense_proj(cfg, x, p["w_up"])
+        return dense_proj(cfg, h, p["w2"], shard=("row", Fdim)) + p["b2"].astype(dt)
+    g = dense_proj(cfg, x, p["w_gate"], shard=("col", Fdim))
+    u = dense_proj(cfg, x, p["w_up"], shard=("col", Fdim))
     act = jax.nn.gelu(g, approximate=True) if kind == "geglu" else jax.nn.silu(g)
-    return dense_proj(cfg, act * u, p["w_down"])
+    return dense_proj(cfg, act * u, p["w_down"], shard=("row", Fdim))
 
 
 # ---------------------------------------------------------------------------
@@ -840,8 +949,6 @@ def moe_forward(cfg: ArchConfig, p: dict, x):
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     if cfg.moe_shard_map and mesh is not None and tp > 1 and E % tp == 0:
         from jax.sharding import PartitionSpec as P
-
-        from repro.core.torus import shard_map as _shmap
         # ZeRO-3 boundary: explicitly all-gather the FSDP (data-axis) shards
         # of the expert weights *before* the manual region — a data-sharded
         # contraction inside shard_map would otherwise force a cross-data
@@ -851,15 +958,11 @@ def moe_forward(cfg: ArchConfig, p: dict, x):
                          for k in ("w_gate", "w_up", "w_down"))
         body = functools.partial(_moe_expert_block, E_l=E // tp, C=C, kk=kk,
                                  dt=dt, axis="model")
-        specs = dict(
-            in_specs=(P(), P(), P(None, "model", None), P(), P(), P("model"),
-                      P("model"), P("model")),
-            out_specs=P())
-        if hasattr(jax, "shard_map"):  # newer jax: partial-manual via names
-            fn = jax.shard_map(body, mesh=mesh, axis_names={"model"}, **specs)
-        else:  # jax.experimental: other mesh axes stay auto
-            auto = frozenset(mesh.axis_names) - {"model"}
-            fn = _shmap(body, mesh=mesh, auto=auto, check_rep=False, **specs)
+        fn = tp_shard_map(
+            body, mesh,
+            (P(), P(), P(None, "model", None), P(), P(), P("model"),
+             P("model"), P("model")),
+            P())
         out = fn(xt, wk3, idx3, sel3, pos3, wg_, wu_, wd_)
     else:
         out = _moe_expert_block(xt, wk3, idx3, sel3, pos3, p["w_gate"],

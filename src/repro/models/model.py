@@ -136,6 +136,35 @@ def quantize_params(cfg: ArchConfig, params: dict) -> dict:
     return new
 
 
+def shard_params(cfg: ArchConfig, params: dict, mesh, *, fsdp: bool = False):
+    """Place a params tree on ``mesh`` with the logical-axis TP rules
+    (heads/ffn/vocab/experts → ``model``, divisibility fallback intact).
+
+    Handles the two ways a serving params tree deviates from ``param_specs``:
+    ``QTensor`` leaves (w8a8) are placed *replicated* — sharding the int8
+    GEMM's contraction dim would re-quantize activations per shard and break
+    single-device numerics parity (DESIGN.md §9) — and the tied-head extra
+    ``lm_head_q`` key gets the float head's ("embed", "vocab") spec.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch.sharding import resolve_pspec
+    from repro.models.params import is_spec
+    specs = param_specs(cfg)
+    if "lm_head_q" in params:
+        specs = dict(specs, lm_head_q=ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                                ("embed", "vocab")))
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    def place(spec, val):
+        if isinstance(val, QTensor):
+            return QTensor(jax.device_put(val.q, repl),
+                           jax.device_put(val.scale, repl))
+        ns = NamedSharding(mesh, resolve_pspec(spec, mesh, fsdp=fsdp))
+        return jax.device_put(val, ns)
+
+    return jax.tree.map(place, specs, params, is_leaf=is_spec)
+
+
 # ---------------------------------------------------------------------------
 # Caches
 # ---------------------------------------------------------------------------
@@ -425,7 +454,8 @@ def lm_logits(cfg: ArchConfig, params, hidden):
     # f32 store: the GEMM epilogue's f32 accumulator reaches the sampler /
     # loss untouched instead of round-tripping through the compute dtype
     # (bf16 logits quantize argmax ties and top-k tails — analysis rule J006)
-    logits = L.dense_proj(cfg, hidden, head, out_dtype=jnp.float32)
+    logits = L.dense_proj(cfg, hidden, head, out_dtype=jnp.float32,
+                          shard=("col", cfg.padded_vocab))
     return constrain(logits, ("batch", "seq", "vocab"))
 
 

@@ -1,5 +1,5 @@
 from repro.core.cache import CacheLayout  # noqa: F401
-from repro.serving.config import CacheSpec, EngineConfig  # noqa: F401
+from repro.serving.config import CacheSpec, EngineConfig, MeshSpec  # noqa: F401
 from repro.serving.engine import (Engine, ModelRunner, Request,  # noqa: F401
                                   RequestResult, Scheduler, ServeStats,
                                   bytes_tokenizer_decode,

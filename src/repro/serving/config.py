@@ -41,6 +41,46 @@ class CacheSpec:
 
 
 @dataclass(frozen=True)
+class MeshSpec:
+    """Serving mesh geometry: ``data`` replicas × ``model`` tensor/expert-
+    parallel shards, built over the first ``data * model`` jax devices (a
+    submesh — the platform may have more; see
+    ``launch.mesh.make_device_mesh``).  Parse the CLI spelling with
+    ``MeshSpec.parse("2x4")`` (``"4"`` alone means model-parallel only)."""
+    data: int = 1
+    model: int = 1
+
+    def __post_init__(self):
+        if self.data < 1 or self.model < 1:
+            raise ValueError(f"mesh axes must be >= 1, got "
+                             f"data={self.data} model={self.model}")
+
+    @property
+    def size(self) -> int:
+        return self.data * self.model
+
+    @classmethod
+    def parse(cls, s: "str | MeshSpec") -> "MeshSpec":
+        if isinstance(s, MeshSpec):
+            return s
+        parts = str(s).lower().replace("×", "x").split("x")
+        try:
+            if len(parts) == 1:
+                return cls(1, int(parts[0]))
+            if len(parts) == 2:
+                return cls(int(parts[0]), int(parts[1]))
+        except ValueError:
+            pass
+        raise ValueError(f"mesh spec {s!r}: expected 'DxM' (e.g. '1x8') or "
+                         f"a bare model-parallel degree (e.g. '8')")
+
+    def build(self):
+        """The jax Mesh (imports jax; config construction itself does not)."""
+        from repro.launch.mesh import make_device_mesh
+        return make_device_mesh((self.data, self.model), ("data", "model"))
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     """Everything the serving engine compiles and allocates against.
 
@@ -73,6 +113,13 @@ class EngineConfig:
     max_queue:     admission-control bound; ``submit`` refuses beyond it
     kernel_mode:   override ``cfg.kernel_mode`` (reference|interpret|pallas)
     quant:         override ``cfg.quant`` ("w8a8" quantizes weights at init)
+    mesh:          optional ``MeshSpec`` — place params/caches with
+                   ``NamedSharding`` over a ``(data, model)`` device mesh and
+                   compile every executable under it (tensor-parallel dense
+                   layers, KV pools sharded over KV heads, expert-parallel
+                   MoE).  ``None`` (default) keeps the single-device path
+                   byte-for-byte unchanged.  Accepts a ``MeshSpec`` or the
+                   CLI string spelling (``"1x8"``/``"8"``)
     """
     page_size: int = 64
     n_pages: int | None = None
@@ -87,6 +134,7 @@ class EngineConfig:
     max_queue: int = 1024
     kernel_mode: str | None = None
     quant: str | None = None
+    mesh: MeshSpec | str | None = None
 
     def __post_init__(self):
         if self.page_size < 8 or self.page_size % 8:
@@ -105,6 +153,8 @@ class EngineConfig:
         if self.n_pages < 2:
             raise ValueError("n_pages must be >= 2 (one usable page plus the "
                              "reserved trash page)")
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            object.__setattr__(self, "mesh", MeshSpec.parse(self.mesh))
 
     def cache_spec(self) -> CacheSpec:
         return CacheSpec(CacheLayout.PAGED, self.page_size, self.n_pages,

@@ -78,6 +78,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.core import round_up
+from repro.launch.sharding import activation_mesh, tree_pspecs
 from repro.models import model as M
 from repro.models.params import is_spec
 from repro.serving.config import CacheSpec, EngineConfig
@@ -194,20 +195,49 @@ class ModelRunner:
     variant limit."""
 
     def __init__(self, cfg: ArchConfig, params, config: EngineConfig):
-        self.cfg, self.params = cfg, params
+        self.cfg = cfg
         self.page_size = config.page_size
         self.decode_chunk = config.decode_chunk
         self.eos_id = config.eos_id
         self.vocab = cfg.vocab_size
+        # mesh-sharded serving: place params with the logical-axis TP rules
+        # and every KV pool over its kv_heads axis (page tables stay
+        # replicated host-side numpy — the Scheduler is device-agnostic)
+        self.mesh = (config.mesh.build()
+                     if config.mesh is not None and config.mesh.size > 1
+                     else None)
+        if self.mesh is not None:
+            params = M.shard_params(cfg, params, self.mesh)
+        self.params = params
         self.cache_specs = M.paged_cache_specs(cfg, config.max_batch,
                                                config.n_pages,
                                                config.page_size)
         self.caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
             self.cache_specs, is_leaf=is_spec)
-        self.decode_fn = jax.jit(self._decode_chunk, donate_argnums=(1,))
-        self.copy_fn = jax.jit(self._copy_page, donate_argnums=(0,))
+        if self.mesh is not None:
+            self.caches = jax.tree.map(
+                jax.device_put, self.caches,
+                tree_pspecs(self.cache_specs, self.mesh))
+        self.decode_fn = jax.jit(self._traced(self._decode_chunk),
+                                 donate_argnums=(1,))
+        self.copy_fn = jax.jit(self._traced(self._copy_page),
+                               donate_argnums=(0,))
         self.fns: OrderedDict[tuple, Any] = OrderedDict()
+
+    def _traced(self, fn):
+        """Trace-time mesh context: the model's ``constrain`` calls (and the
+        Pallas ``shard_map`` wrappers) only see the mesh if it is set while
+        jit *traces* the function, not when the executable is called."""
+        if self.mesh is None:
+            return fn
+
+        @functools.wraps(fn)
+        def wrapped(*args):
+            with activation_mesh(self.mesh):
+                return fn(*args)
+
+        return wrapped
 
     # -- sampling / decode ------------------------------------------------
 
@@ -285,9 +315,10 @@ class ModelRunner:
     def mixed_fn(self, C: int, limit: int):
         """The mixed-step executable for chunk-buffer size ``C`` (the only
         shape degree of freedom — chunk offset/length are traced scalars)."""
-        return self._cached(("mixed", C),
-                            lambda: jax.jit(self._mixed, donate_argnums=(1,)),
-                            limit)
+        return self._cached(
+            ("mixed", C),
+            lambda: jax.jit(self._traced(self._mixed), donate_argnums=(1,)),
+            limit)
 
     # -- exact-length whole-prompt prefill (non-decomposable mixers) ------
 
@@ -331,8 +362,9 @@ class ModelRunner:
         prompt length, LRU-bounded like the mixed variants."""
         return self._cached(
             ("whole", n),
-            lambda: jax.jit(functools.partial(self._whole_prefill, n),
-                            donate_argnums=(1,)),
+            lambda: jax.jit(
+                self._traced(functools.partial(self._whole_prefill, n)),
+                donate_argnums=(1,)),
             limit)
 
     def _cached(self, key, build, limit: int):
@@ -669,6 +701,13 @@ class Engine:
             cfg = cfg.with_(quant=config.quant)
         if cfg.quant == "w8a8":
             params = M.quantize_params(cfg, params)  # idempotent
+        if config.mesh is not None and config.mesh.model > 1 \
+                and cfg.num_experts and cfg.num_experts % config.mesh.model == 0:
+            # expert-parallel decode: route tokens across the model axis via
+            # the moe_specs/_moe_expert_block manual-axis path (each device
+            # holds E/tp experts; the dispatch/combine gathers stay local
+            # and one f32 psum merges the partial outputs)
+            cfg = cfg.with_(moe_shard_map=True)
         self.cfg, self.params = cfg, params
         self.config = config
         self.cache_spec: CacheSpec = config.cache_spec()

@@ -16,7 +16,9 @@ from repro.analysis import (
     check_donation,
     check_kernel_spec,
     check_logits_dtype,
+    lint_hlo,
     lint_jaxpr,
+    param_gather_shapes,
 )
 from repro.analysis.bounds import _GuardedTable
 from repro.analysis.findings import Finding
@@ -113,6 +115,85 @@ def test_j006_fires_on_bf16_logits():
     assert rules_of(check_logits_dtype(aval)) == {"J006"}
     ok = jax.ShapeDtypeStruct((2, 1, 256), jnp.float32)
     assert check_logits_dtype(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# J007: compiled-HLO sharded-surface lint (pure text — no mesh needed)
+# ---------------------------------------------------------------------------
+
+_HLO_PARAM_GATHER = """
+  %ag.1 = f32[128,16384]{1,0} all-gather(f32[128,2048]{1,0} %w), dimensions={1}
+"""
+_HLO_ACT_GATHER = """
+  %ag.2 = f32[2,8,64]{2,1,0} all-gather(f32[2,1,64]{2,1,0} %x), dimensions={1}
+"""
+_HLO_HOST = """
+  %cc = f32[4]{0} custom-call(f32[4]{0} %y), custom_call_target="SendToHost"
+  %of = token[] outfeed(f32[4]{0} %z, token[] %tok)
+"""
+
+
+def test_j007_fires_on_full_param_all_gather():
+    fs = lint_hlo(_HLO_PARAM_GATHER, {(128, 16384)})
+    assert rules_of(fs) == {"J007"}
+    assert "(128, 16384)" in fs[0].message
+
+
+def test_j007_ignores_activation_all_gather():
+    # the gathered shape matches no parameter leaf -> legitimate
+    # activation collective, not a finding
+    assert lint_hlo(_HLO_ACT_GATHER, {(128, 16384)}) == []
+
+
+def test_j007_fires_on_host_transfers():
+    fs = lint_hlo(_HLO_HOST, set())
+    assert len(fs) == 2 and rules_of(fs) == {"J007"}
+    msgs = " ".join(f.message for f in fs)
+    assert "SendToHost" in msgs and "outfeed" in msgs
+
+
+def test_j007_silent_on_clean_module():
+    clean = """
+  %dot = f32[64,64]{1,0} dot(f32[64,32]{1,0} %a, f32[32,64]{1,0} %b)
+  %ar = f32[64,64]{1,0} all-reduce(f32[64,64]{1,0} %dot), to_apply=%sum
+  %cc = f32[4]{0} custom-call(f32[4]{0} %y), \
+custom_call_target="annotate_device_placement"
+"""
+    assert lint_hlo(clean, {(64, 64), (128, 16384)}) == []
+
+
+def test_j007_dedupes_repeated_gathers():
+    fs = lint_hlo(_HLO_PARAM_GATHER * 3, {(128, 16384)})
+    assert len(fs) == 1
+
+
+def test_param_gather_shapes_layer_slices():
+    params = {"stacked": np.zeros((4, 128, 256), np.float32),
+              "flat": np.zeros((256, 512), np.float32),
+              "tiny": np.zeros((8,), np.float32)}
+    shapes = param_gather_shapes(params)
+    assert (4, 128, 256) in shapes        # full stacked leaf
+    assert (128, 256) in shapes           # per-layer slice
+    assert (256, 512) in shapes           # plain 2D leaf
+    assert (8,) not in shapes             # below the size threshold
+
+
+def test_j007_fires_on_real_sharded_mutation():
+    """End-to-end on this host's devices: shard a weight over a 2-device
+    mesh, then undo the placement with a replicate constraint — the SPMD
+    partitioner must emit a full-parameter all-gather that J007 catches."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (multi-device CI lane)")
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:2]), ("model",))
+    w = jax.device_put(jnp.zeros((128, 128), jnp.float32),
+                       NamedSharding(mesh, P("model", None)))
+    bad = jax.jit(lambda w: jax.lax.with_sharding_constraint(
+        w, NamedSharding(mesh, P())) * 2.0)
+    hlo = bad.lower(w).compile().as_text()
+    fs = lint_hlo(hlo, param_gather_shapes({"w": w}))
+    assert rules_of(fs) == {"J007"}
 
 
 # ---------------------------------------------------------------------------
