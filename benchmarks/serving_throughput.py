@@ -17,6 +17,12 @@ Workloads:
   prefill head-of-line-blocks every in-flight decode for its whole
   duration (an ITL spike); chunked, it streams through the mixed step 32
   tokens per tick and decodes keep flowing.
+- degraded mode: a 2x-oversubscribed Poisson burst against a deliberately
+  small page pool, ``preemption="recompute"`` vs ``"off"`` — goodput
+  (healthy completions/s) plus preemption / rejection / deadline-expiry
+  rates.  Recompute admits on prompt-only reservations and resolves pool
+  pressure by preempt-and-recompute; off reserves fully up front and sheds
+  the same load at the bounded queue instead.
 - mesh scaling: re-execs itself with 8 forced host devices and measures
   closed-batch tokens/s plus compiled-HLO bytes-accessed-per-decode-token
   at mesh widths 1/2/4/8 (host-CPU shards share the physical core pool, so
@@ -159,6 +165,49 @@ def bench_prefix_reuse(cfg, params, n_req=8, prefix_len=512, suffix_len=8,
     return out
 
 
+def bench_degraded(cfg, params, preemption, *, n_req=16, rate=400.0,
+                   max_new=24, page_size=16, n_pages=10, max_batch=6,
+                   max_queue=4, deadline_s=5.0, seed=9):
+    """2x-oversubscribed Poisson burst against a deliberately small page
+    pool (9 usable pages vs an 18-page full-reservation demand at
+    ``max_batch``).  ``preemption="recompute"`` admits on prompt-only
+    reservations and resolves pool pressure by preempt-and-recompute;
+    ``"off"`` reserves fully up front and sheds the same load at the
+    bounded queue.  Nothing is silently dropped either way — every request
+    comes back with a :class:`FinishReason`."""
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab_size, rng.randint(12, 28)).tolist()
+               for _ in range(n_req)]
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=4 * page_size, max_batch=max_batch, page_size=page_size,
+        n_pages=n_pages, decode_chunk=4, chunk_tokens=16,
+        max_queue=max_queue, deadline_s=deadline_s, preemption=preemption))
+    eng.generate(prompts[:2], max_new=4)  # warm compiles
+    base = (eng.stats.preempted, eng.stats.rejected,
+            eng.stats.deadline_expired)
+    due = np.cumsum(rng.exponential(1.0 / rate, n_req))
+    t0, nxt, results = time.time(), 0, []
+    while nxt < n_req or eng.num_queued or eng.num_active:
+        now = time.time() - t0
+        while nxt < n_req and now >= due[nxt]:
+            eng.submit(prompts[nxt], max_new, seed=nxt)
+            nxt += 1
+        if not (eng.num_queued or eng.num_active):
+            time.sleep(min(0.01, max(0.0, due[nxt] - now)))
+            continue
+        results.extend(eng.step())
+    results.extend(eng.run())
+    wall = time.time() - t0
+    ok = [r for r in results if r.ok]
+    return dict(
+        wall=wall, total=len(results), completed=len(ok),
+        goodput_req_s=len(ok) / wall,
+        goodput_tok_s=sum(len(r.generated) for r in ok) / wall,
+        preempted=eng.stats.preempted - base[0],
+        rejected=eng.stats.rejected - base[1],
+        deadline_expired=eng.stats.deadline_expired - base[2])
+
+
 def bench_mesh_child(arch: str) -> dict:
     """Runs inside the 8-forced-device subprocess: closed-batch throughput
     and compiled decode bytes-per-token at mesh widths 1/2/4/8."""
@@ -182,7 +231,8 @@ def bench_mesh_child(arch: str) -> dict:
             runner.params, runner.caches, jnp.asarray(sched.pages),
             jnp.asarray(sched.cur), jnp.asarray(sched.pos),
             jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
-            jnp.asarray(sched.keys))
+            jnp.asarray(sched.keys),
+            jnp.zeros(eng.config.max_batch, jnp.bool_))
         ca = lowered.compile().cost_analysis()
         if isinstance(ca, (list, tuple)):               # older jax spelling
             ca = ca[0] if ca else {}
@@ -311,6 +361,21 @@ def run(arch: str = "olmo-1b", slo_ttft_s: float = 2.0,
                f"{gp['unchunked']['itl_p99'] / max(gp['chunked']['itl_p99'], 1e-9):.1f}x "
                f"(the long prefill no longer head-of-line-blocks decodes)")
 
+    dg = {mode: bench_degraded(cfg, params, mode)
+          for mode in ("recompute", "off")}
+    out.append("degraded mode (2x-oversubscribed Poisson burst, 9-page "
+               "pool, bounded queue):")
+    for mode, d in dg.items():
+        out.append(f"  preemption={mode}: goodput={d['goodput_req_s']:.1f} "
+                   f"req/s ({d['goodput_tok_s']:.1f} tok/s) "
+                   f"completed={d['completed']}/{d['total']} "
+                   f"preempted={d['preempted']} rejected={d['rejected']} "
+                   f"deadline={d['deadline_expired']}")
+    out.append("derived: recompute-preemption trades repeat prefill work "
+               "(cheap — radix hits cover the recompute) for admission at "
+               "prompt-only reservations; full up-front reservation sheds "
+               "the same burst at the bounded queue instead")
+
     pr = bench_prefix_reuse(cfg, params)
     out.append(f"prefix reuse (8 reqs sharing a 512-token prefix, "
                f"{pr['kv_rows_budget']} KV rows total): "
@@ -357,6 +422,9 @@ def run(arch: str = "olmo-1b", slo_ttft_s: float = 2.0,
         unchunked_ttft_p99_s=round(gp["unchunked"]["ttft_p99"], 4),
         unchunked_itl_p99_s=round(gp["unchunked"]["itl_p99"], 4),
         unchunked_goodput_frac=round(gp["unchunked"]["goodput_frac"], 4),
+        degraded={mode: {k: (round(v, 4) if isinstance(v, float) else int(v))
+                         for k, v in d.items()}
+                  for mode, d in dg.items()},
         mesh_scaling=ms,
     )
     return out, blob

@@ -36,19 +36,29 @@ def main():
                     choices=["reference", "interpret", "pallas"])
     ap.add_argument("--quant", default=None, choices=["none", "w8a8"],
                     help="w8a8: serve through the packed int8 GEMM kernels")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline (s); late requests retire "
+                         "with finish_reason=deadline")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "recompute", "drop"],
+                    help="page-pressure policy (see EngineConfig.preemption)")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
     params = M.init(cfg, jax.random.PRNGKey(0))
-    # batch of 2 for 4 requests: watch the engine recycle pages mid-flight
-    eng = Engine(cfg, params, EngineConfig(
-        max_len=256, max_batch=args.batch, chunk_tokens=args.chunk_tokens,
-        kernel_mode=args.kernel_mode, quant=args.quant))
-
-    for i, req in enumerate(REQUESTS):
-        eng.submit(bytes_tokenizer_encode(req, cfg.vocab_size),
-                   max_new=args.max_new, temperature=args.temperature, seed=i)
-    results = {r.rid: r for r in eng.run()}
+    # batch of 2 for 4 requests: watch the engine recycle pages mid-flight;
+    # the `with` block retires anything unfinished as CANCELLED and checks
+    # the page pool reconciles on the way out
+    with Engine(cfg, params, EngineConfig(
+            max_len=256, max_batch=args.batch,
+            chunk_tokens=args.chunk_tokens, deadline_s=args.deadline,
+            preemption=args.preemption,
+            kernel_mode=args.kernel_mode, quant=args.quant)) as eng:
+        for i, req in enumerate(REQUESTS):
+            eng.submit(bytes_tokenizer_encode(req, cfg.vocab_size),
+                       max_new=args.max_new, temperature=args.temperature,
+                       seed=i)
+        results = {r.rid: r for r in eng.run()}
 
     stats = eng.stats
     print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
@@ -57,8 +67,9 @@ def main():
           f"({stats.tokens_per_s:.1f} tok/s, "
           f"prefix_hit={eng.prefix_hit_rate:.0%})")
     for rid, req in enumerate(REQUESTS):
-        gen = bytes_tokenizer_decode(results[rid].generated)
-        print(f"  [{req[:40]:40s}] -> {gen!r}")
+        r = results[rid]
+        gen = bytes_tokenizer_decode(r.generated)
+        print(f"  [{req[:40]:40s}] ({r.finish_reason.value}) -> {gen!r}")
 
 
 if __name__ == "__main__":

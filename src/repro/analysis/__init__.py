@@ -11,7 +11,8 @@ from repro.analysis.hlo_lints import lint_hlo, param_gather_shapes
 from repro.analysis.jaxpr_lints import (check_logits_dtype, iter_jaxprs,
                                         lint_jaxpr)
 from repro.analysis.runner import (MODES, QUANTS, analysis_config, check_cell,
-                                   check_kernels, check_paging, check_sharded,
+                                   check_kernels, check_paging,
+                                   check_resilience, check_sharded,
                                    run_analysis)
 
 __all__ = [
@@ -19,5 +20,5 @@ __all__ = [
     "check_kernel_spec", "check_donation", "check_logits_dtype",
     "iter_jaxprs", "lint_jaxpr", "lint_hlo", "param_gather_shapes",
     "MODES", "QUANTS", "analysis_config", "check_cell", "check_kernels",
-    "check_paging", "check_sharded", "run_analysis",
+    "check_paging", "check_resilience", "check_sharded", "run_analysis",
 ]

@@ -39,6 +39,9 @@ RULES: Dict[str, str] = {
             "axis (partial accumulator stores)",
     "P001": "paging invariant violation (PagePool/RadixCache structural "
             "check, see paging.check_invariants)",
+    "R001": "unreachable resilience branch: a FinishReason the Scheduler "
+            "must be able to emit was not produced by the canonical "
+            "degraded-mode scenario suite (see runner.check_resilience)",
 }
 
 

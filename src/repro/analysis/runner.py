@@ -121,7 +121,9 @@ def check_cell(name: str, mode: str, quant: str, report: Report,
     _lint_entry(report, pfx, (runner.params, _batch(eng.cfg)),
                 f"{base} entry=prefill", logits=True)
 
-    dec_args = (runner.params, caches, pages, cur, pos, remaining, temp, keys)
+    nanmask = jnp.zeros(_B, jnp.bool_)
+    dec_args = (runner.params, caches, pages, cur, pos, remaining, temp, keys,
+                nanmask)
     _lint_entry(report, runner._decode_chunk, dec_args,
                 f"{base} entry=decode", donate=(1,))
     report.extend(check_logits_dtype(
@@ -138,7 +140,8 @@ def check_cell(name: str, mode: str, quant: str, report: Report,
         C = 8
         mixed_args = (runner.params, caches, jnp.zeros((1, C), jnp.int32),
                       pages[:1], jnp.int32(0), jnp.int32(C), jnp.float32(0.0),
-                      keys[0], pages, cur, pos, remaining, temp, keys)
+                      keys[0], jnp.bool_(False), pages, cur, pos, remaining,
+                      temp, keys, nanmask)
         _lint_entry(report, runner._mixed, mixed_args,
                     f"{base} entry=mixed", donate=(1,))
     elif all(sp.mixer != "cross" for sp in eng.cfg.layer_specs()):
@@ -196,7 +199,9 @@ def check_sharded(name: str, report: Report, params=None) -> None:
     keys = jnp.zeros((_B, 2), jnp.uint32)
     shapes = param_gather_shapes(runner.params)
 
-    dec_args = (runner.params, caches, pages, cur, pos, remaining, temp, keys)
+    nanmask = jnp.zeros(_B, jnp.bool_)
+    dec_args = (runner.params, caches, pages, cur, pos, remaining, temp, keys,
+                nanmask)
     _lint_entry(report, runner._traced(runner._decode_chunk), dec_args,
                 f"{base} entry=decode", donate=(1,))
     hlo = runner.decode_fn.lower(*dec_args).compile().as_text()
@@ -207,7 +212,8 @@ def check_sharded(name: str, report: Report, params=None) -> None:
         C = 8
         mixed_args = (runner.params, caches, jnp.zeros((1, C), jnp.int32),
                       pages[:1], jnp.int32(0), jnp.int32(C), jnp.float32(0.0),
-                      keys[0], pages, cur, pos, remaining, temp, keys)
+                      keys[0], jnp.bool_(False), pages, cur, pos, remaining,
+                      temp, keys, nanmask)
         _lint_entry(report, runner._traced(runner._mixed), mixed_args,
                     f"{base} entry=mixed", donate=(1,))
         hlo = runner.mixed_fn(C, 1).lower(*mixed_args).compile().as_text()
@@ -307,6 +313,88 @@ def check_paging(report: Report) -> None:
     report.checked.append(ctx)
 
 
+def check_resilience(report: Report) -> None:
+    """R001: every ``FinishReason`` branch in the Scheduler is reachable.
+
+    Drives a tiny *executed* (not traced) engine on the reduced edge config
+    through one canonical scenario per finish reason — healthy STOP/LENGTH,
+    then deadline expiry (chaos-skewed clock), cancellation, bounded-queue
+    rejection, preemption under page pressure (``preemption="drop"``) and
+    NaN fault isolation — and reports a finding for any reason that never
+    surfaces, plus any resilience counter that failed to move.  This is the
+    rot check for the degraded-mode state machine: a refactor that silently
+    disconnects one of these paths (e.g. ``expire`` never called, ``cancel``
+    not wired through) fails here even if no unit test covers it."""
+    from repro.serving import ChaosInjector
+    from repro.serving.engine import FinishReason
+
+    ctx = "resilience scenarios"
+    cfg = reduce_config(get_config("cgra-edge"))  # f32: executed, not traced
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    ec = dict(page_size=16, max_batch=2, max_len=64, decode_chunk=2,
+              prefix_cache=False)
+    prompt = list(range(1, 9))
+    seen: set[FinishReason] = set()
+    stats_hits: set[str] = set()
+
+    def note(eng, results):
+        seen.update(r.finish_reason for r in results)
+        for f in ("preempted", "rejected", "deadline_expired", "cancelled",
+                  "faults_isolated"):
+            if getattr(eng.stats, f) > 0:
+                stats_hits.add(f)
+
+    # STOP needs a token the model really emits: probe it greedily first
+    eng = Engine(cfg, params, EngineConfig(**ec))
+    eng.submit(prompt, max_new=2)
+    probe = eng.run()
+    note(eng, probe)  # LENGTH (max_new exhausted, no eos configured)
+    first = probe[0].generated[0]
+
+    eng = Engine(cfg, params, EngineConfig(eos_id=first, **ec))
+    eng.submit(prompt, max_new=4)
+    note(eng, eng.run())  # STOP (first sampled token is the eos)
+
+    # DEADLINE: the chaos clock jumps +1000s before the first tick
+    chaos = ChaosInjector(schedule={"clock.skew": {0}}, skew_s=1000.0)
+    eng = Engine(cfg, params, EngineConfig(**ec), chaos=chaos)
+    eng.submit(prompt, max_new=4, deadline_s=5.0)
+    note(eng, eng.run())
+
+    # CANCELLED (queued) + REJECTED (queue bound 1)
+    eng = Engine(cfg, params, EngineConfig(max_queue=1, **ec))
+    rid = eng.submit(prompt, max_new=4)
+    eng.submit(list(prompt), max_new=4)  # overflows the bound
+    eng.cancel(rid)
+    note(eng, eng.run())
+
+    # PREEMPTED: two requests oversubscribe a 3-usable-page pool in "drop"
+    eng = Engine(cfg, params, EngineConfig(n_pages=4, preemption="drop",
+                                           **ec))
+    eng.submit(list(range(1, 17)), max_new=20)
+    eng.submit(list(range(2, 18)), max_new=20)
+    note(eng, eng.run())
+
+    # FAULT: poison the first compiled step's logits
+    chaos = ChaosInjector(schedule={"logits.nan": {0}})
+    eng = Engine(cfg, params, EngineConfig(**ec), chaos=chaos)
+    eng.submit(prompt, max_new=4)
+    note(eng, eng.run())
+
+    for reason in FinishReason:
+        if reason not in seen:
+            report.add(Finding(
+                "R001", f"FinishReason.{reason.name} was never produced by "
+                        f"its canonical scenario", ctx))
+    for f in ("preempted", "rejected", "deadline_expired", "cancelled",
+              "faults_isolated"):
+        if f not in stats_hits:
+            report.add(Finding(
+                "R001", f"ServeStats.{f} never incremented across the "
+                        f"scenario suite", ctx))
+    report.checked.append(ctx)
+
+
 def run_analysis(configs: Optional[Sequence[str]] = None,
                  modes: Iterable[str] = MODES,
                  quants: Iterable[str] = QUANTS,
@@ -334,4 +422,7 @@ def run_analysis(configs: Optional[Sequence[str]] = None,
             progress(f"sharded surfaces {name}")
         check_sharded(name, report, params=params)
     check_paging(report)
+    if progress:
+        progress("resilience scenarios")
+    check_resilience(report)
     return report

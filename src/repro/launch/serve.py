@@ -56,16 +56,43 @@ def main():
                          "model-parallel only).  Params/KV pools are placed "
                          "with NamedSharding; MoE configs route experts "
                          "across the model axis")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request deadline in seconds (queueing + "
+                         "execution); expired requests retire "
+                         "FinishReason.DEADLINE")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission queue bound; past it requests finish "
+                         "immediately as REJECTED with a retry_after_s hint")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "recompute", "drop"],
+                    help="page-pressure policy: 'recompute' admits on "
+                         "prompt-only page reservations and preempts the "
+                         "lowest-priority decode on exhaustion (requeue + "
+                         "bit-identical recompute); 'drop' sheds the victim "
+                         "with its partial output")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="attach a seeded ChaosInjector (transient "
+                         "pool.alloc / runner.mixed faults + rare NaN "
+                         "logits) to exercise the degraded paths")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch)) if args.reduced \
         else get_config(args.arch)
     params = M.init(cfg, jax.random.PRNGKey(0))
+    chaos = None
+    if args.chaos is not None:
+        from repro.serving import ChaosInjector
+        chaos = ChaosInjector(seed=args.chaos,
+                              rates={"pool.alloc": 0.05,
+                                     "runner.mixed": 0.05,
+                                     "logits.nan": 0.01})
     eng = Engine(cfg, params, EngineConfig(
         max_len=args.max_len, max_batch=args.batch, page_size=args.page_size,
         n_pages=args.pages, prefix_cache=not args.no_prefix_cache,
-        chunk_tokens=args.chunk_tokens,
-        kernel_mode=args.kernel_mode, quant=args.quant, mesh=args.mesh))
+        chunk_tokens=args.chunk_tokens, max_queue=args.max_queue,
+        deadline_s=args.deadline, preemption=args.preemption,
+        kernel_mode=args.kernel_mode, quant=args.quant, mesh=args.mesh),
+        chaos=chaos)
 
     rng = np.random.RandomState(0)
     prompts = [bytes_tokenizer_encode(f"request {i}: " + "x" * rng.randint(4, 40),
@@ -91,17 +118,26 @@ def main():
             eng.submit(p, args.max_new, args.temperature, seed=i)
         results = eng.run()
 
+    results.extend(eng.close())  # drain + reconcile the paging state
     stats = eng.stats
-    lat = sorted(r.latency_s for r in results)
+    ok = [r for r in results if r.ok]
+    lat = sorted(r.latency_s for r in ok) or [0.0]
     p50 = lat[len(lat) // 2]
     p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
     print(f"arch={cfg.name} kernel_mode={eng.cfg.kernel_mode} "
-          f"quant={eng.cfg.quant} requests={len(results)} "
+          f"quant={eng.cfg.quant} requests={len(results)} ok={len(ok)} "
           f"batch={args.batch} pages={eng.pool.n_pages} "
           f"prefill={stats.prefill_s:.2f}s decode={stats.decode_s:.2f}s "
           f"throughput={stats.tokens_per_s:.1f} tok/s "
           f"prefix_hit={eng.prefix_hit_rate:.0%} "
           f"p50={p50:.2f}s p99={p99:.2f}s")
+    if (stats.preempted or stats.rejected or stats.deadline_expired
+            or stats.cancelled or stats.faults_isolated):
+        print(f"degraded: preempted={stats.preempted} "
+              f"rejected={stats.rejected} "
+              f"deadline_expired={stats.deadline_expired} "
+              f"cancelled={stats.cancelled} "
+              f"faults_isolated={stats.faults_isolated}")
 
 
 if __name__ == "__main__":

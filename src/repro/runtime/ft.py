@@ -22,6 +22,7 @@ import numpy as np
 
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.serving.chaos import ChaosInjector
 
 
 @dataclass
@@ -48,16 +49,25 @@ class StragglerMonitor:
         return slow
 
 
-class FailureInjector:
-    """Deterministic failure injection for tests: raises at given steps."""
+class FailureInjector(ChaosInjector):
+    """Deterministic failure injection for tests: raises at given steps.
+
+    A thin specialization of the serving chaos harness
+    (:class:`repro.serving.chaos.ChaosInjector`) over a single
+    ``train.step`` fault point keyed by the external step number — each
+    step fires at most once, so a restarted run re-traversing the same
+    steps does not re-fail."""
 
     def __init__(self, fail_at: set[int] | None = None):
+        super().__init__(schedule={"train.step": set(fail_at or ())},
+                         points=("train.step",))
         self.fail_at = set(fail_at or ())
         self.fired: set[int] = set()
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
+            self.events.append(("train.step", step))
             raise RuntimeError(f"injected node failure at step {step}")
 
 

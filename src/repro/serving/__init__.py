@@ -1,6 +1,9 @@
 from repro.core.cache import CacheLayout  # noqa: F401
+from repro.serving.chaos import (FAULT_POINTS, ChaosError,  # noqa: F401
+                                 ChaosInjector)
 from repro.serving.config import CacheSpec, EngineConfig, MeshSpec  # noqa: F401
-from repro.serving.engine import (Engine, ModelRunner, Request,  # noqa: F401
+from repro.serving.engine import (Engine, FinishReason,  # noqa: F401
+                                  ModelRunner, Request,
                                   RequestResult, Scheduler, ServeStats,
                                   bytes_tokenizer_decode,
                                   bytes_tokenizer_encode)

@@ -110,7 +110,26 @@ class EngineConfig:
                    metadata for goodput reporting, no scheduling effect
     slo_itl_s:     optional inter-token-latency SLO budget (seconds), ditto
     eos_id:        optional stop token (checked inside the scan)
-    max_queue:     admission-control bound; ``submit`` refuses beyond it
+    max_queue:     admission-control queue bound; past it ``submit`` finishes
+                   the request immediately as ``FinishReason.REJECTED`` with
+                   a ``retry_after_s`` backpressure hint (never a silent
+                   drop, never an unbounded queue)
+    deadline_s:    default per-request deadline (seconds from submission,
+                   spanning queueing and execution); requests past it retire
+                   ``FinishReason.DEADLINE``.  ``None`` (default) means no
+                   deadline; ``submit(deadline_s=...)`` overrides per request
+    preemption:    page-pressure policy.  ``"off"`` (default): admission
+                   reserves each request's full page need up front and the
+                   pool can never exhaust mid-decode.  ``"recompute"``:
+                   admission reserves only the prompt's pages, decode rows
+                   grow lazily, and on exhaustion the scheduler preempts the
+                   lowest-priority decoding slot (fewest tokens generated,
+                   ties by latest arrival), frees its pages and requeues it —
+                   its generated tokens recompute via normal chunked prefill
+                   on re-admission, greedy outputs bit-identical to the
+                   never-preempted run.  ``"drop"``: same victim policy, but
+                   the victim retires ``FinishReason.PREEMPTED`` with its
+                   partial output (load shedding)
     kernel_mode:   override ``cfg.kernel_mode`` (reference|interpret|pallas)
     quant:         override ``cfg.quant`` ("w8a8" quantizes weights at init)
     mesh:          optional ``MeshSpec`` — place params/caches with
@@ -132,6 +151,8 @@ class EngineConfig:
     slo_itl_s: float | None = None
     eos_id: int | None = None
     max_queue: int = 1024
+    deadline_s: float | None = None
+    preemption: str = "off"
     kernel_mode: str | None = None
     quant: str | None = None
     mesh: MeshSpec | str | None = None
@@ -143,6 +164,12 @@ class EngineConfig:
         if self.chunk_tokens is not None and self.chunk_tokens < 1:
             raise ValueError(f"chunk_tokens={self.chunk_tokens} must be >= 1 "
                              f"(or None for whole-suffix prefill)")
+        if self.preemption not in ("off", "recompute", "drop"):
+            raise ValueError(f"preemption={self.preemption!r} must be one of "
+                             f"'off', 'recompute', 'drop'")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s={self.deadline_s} must be > 0 "
+                             f"(or None for no deadline)")
         if self.max_len % self.page_size:
             object.__setattr__(self, "max_len",
                                round_up(self.max_len, self.page_size))

@@ -14,15 +14,31 @@ Slot state machine (``Scheduler``)::
     QUEUED --admit--> PREFILLING(offset) --chunks--> DECODING --eos/limit-->
     RETIRED
 
-Admission reserves the request's full page need up front and, on
-prefix-decomposable models (pure attention), starts the slot at
-``offset = radix prefix hit``; each tick the mixed step advances the oldest
-prefilling slot by up to ``chunk_tokens`` prompt rows, writing chunk KV
-straight through the page table (``model.chunk_step`` — no dense gather of
-the past).  When the chunk completes the prompt, the chunk logits' last
-valid row samples the first token and the slot flips to DECODING.  Ticks
-with no prefill work run a ``lax.scan`` of ``decode_chunk`` fused decode
-steps as before.
+Every retirement carries a :class:`FinishReason`: ``STOP``/``LENGTH`` are
+the healthy exits; ``DEADLINE`` (per-request budget expired), ``CANCELLED``
+(:meth:`Engine.cancel` / :meth:`Engine.close`), ``PREEMPTED`` (evicted under
+page pressure with ``preemption="drop"``), ``FAULT`` (non-finite logits —
+the slot is isolated, the rest of the batch continues) and ``REJECTED``
+(bounded-queue admission refused — never a silent drop) are the degraded
+ones.
+
+Admission reserves the request's page need up front — the *full* need
+(prompt + max_new rows) by default, or just the prompt rows when
+``EngineConfig.preemption`` is enabled (lazy growth: decode rows are
+allocated tick by tick, and on pool exhaustion the Scheduler evicts from
+the radix tree, then *preempts* the lowest-priority decoding slot — fewest
+tokens generated, ties by latest arrival — frees its pages and requeues it;
+on re-admission its generated tokens are recomputed via normal chunked
+prefill, with radix prefix hits making the recompute cheap, and greedy
+outputs stay bit-identical to the never-preempted run).  On
+prefix-decomposable models (pure attention) a slot starts at ``offset =
+radix prefix hit``; each tick the mixed step advances the oldest prefilling
+slot by up to ``chunk_tokens`` prompt rows, writing chunk KV straight
+through the page table (``model.chunk_step`` — no dense gather of the
+past).  When the chunk completes the prompt, the chunk logits' last valid
+row samples the first token and the slot flips to DECODING.  Ticks with no
+prefill work run a ``lax.scan`` of ``decode_chunk`` fused decode steps as
+before.
 
 Compiled-variant budget: the mixed step compiles once per chunk *buffer*
 size — with ``chunk_tokens`` set that is one variant total; unset, the
@@ -54,6 +70,16 @@ full pages are published to the tree when its prefill *completes* (pages
 must be fully written before they can be matched), and admission holds
 while a slot is prefilling so lookups never race an unpublished prefix.
 
+Fault isolation: every compiled step carries a per-slot non-finite check on
+the sampled logits — a poisoned slot (NaN/Inf from bad weights, a flaky
+device, or the chaos harness's ``logits.nan`` point) freezes in-graph on
+the faulty step and retires with ``FinishReason.FAULT``; slots are
+KV-independent, so the rest of the batch is unaffected (MoE joint routing
+is the documented exception).  The deterministic chaos harness
+(:mod:`repro.serving.chaos`) drives all of these paths from seeded fault
+schedules; ``Engine(..., chaos=ChaosInjector(...))`` also reroutes the
+engine's clock through the injector so deadline storms are reproducible.
+
 Per-slot determinism: each request carries its own PRNG key and temperature,
 and every slot decodes at its own position, so a request's output is
 independent of whatever shares the batch with it.  (Exception: MoE layers —
@@ -68,6 +94,7 @@ import time
 import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Any
 
 import numpy as np
@@ -81,8 +108,10 @@ from repro.core import round_up
 from repro.launch.sharding import activation_mesh, tree_pspecs
 from repro.models import model as M
 from repro.models.params import is_spec
+from repro.serving.chaos import ChaosError, ChaosInjector
 from repro.serving.config import CacheSpec, EngineConfig
-from repro.serving.paging import PagePool, PrefixMatch, RadixCache
+from repro.serving.paging import (PagePool, PrefixMatch, RadixCache,
+                                  check_invariants)
 
 
 def bytes_tokenizer_encode(text: str, vocab: int) -> list[int]:
@@ -97,6 +126,19 @@ def bytes_tokenizer_decode(tokens) -> str:
 # Requests / results
 # ---------------------------------------------------------------------------
 
+class FinishReason(str, Enum):
+    """Why a request retired.  ``STOP``/``LENGTH`` are healthy completions;
+    everything else is a degraded exit (see the state machine in the module
+    docstring and DESIGN.md §10)."""
+    STOP = "stop"            # emitted eos_id
+    LENGTH = "length"        # emitted max_new tokens
+    DEADLINE = "deadline"    # per-request deadline expired
+    CANCELLED = "cancelled"  # Engine.cancel / Engine.close
+    PREEMPTED = "preempted"  # evicted under page pressure (preemption="drop")
+    FAULT = "fault"          # non-finite logits: slot isolated from the batch
+    REJECTED = "rejected"    # bounded queue refused admission at submit
+
+
 @dataclass
 class Request:
     rid: int
@@ -105,6 +147,23 @@ class Request:
     temperature: float = 0.0
     seed: int = 0
     arrival_s: float = 0.0
+    #: optional wall-clock budget (seconds, relative to arrival); past it the
+    #: request retires DEADLINE wherever it is (queued or in flight)
+    deadline_s: float | None = None
+    # -- preemption/recompute carry-state (engine-internal) ----------------
+    #: tokens generated before a preemption; on re-admission the slot
+    #: prefills prompt + resume_tokens and continues where it left off
+    resume_tokens: list[int] = field(default_factory=list)
+    resume_key: Any = None       # PRNG key as of the preemption point
+    first_token_s: float | None = None
+    token_times: list[float] = field(default_factory=list)
+    preemptions: int = 0
+
+    def full_prompt(self) -> list[int]:
+        """Rows to prefill: the prompt plus any tokens generated before a
+        preemption (recompute path — already-sampled tokens are ordinary
+        prefill input the second time around)."""
+        return list(self.prompt) + list(self.resume_tokens)
 
 
 @dataclass
@@ -119,6 +178,15 @@ class RequestResult:
     #: tokens emitted by the same compiled call share a timestamp); drives
     #: inter-token-latency percentiles in the serving benchmark
     token_times_s: list[float] = field(default_factory=list)
+    finish_reason: FinishReason = FinishReason.LENGTH
+    #: backpressure hint on REJECTED results: seconds after which a retry
+    #: plausibly finds queue room (estimated from in-flight progress)
+    retry_after_s: float | None = None
+
+    @property
+    def ok(self) -> bool:
+        """True for healthy completions (STOP / LENGTH)."""
+        return self.finish_reason in (FinishReason.STOP, FinishReason.LENGTH)
 
     @property
     def tokens(self) -> list[int]:
@@ -150,6 +218,12 @@ class ServeStats:
     peak_active: int = 0
     prefix_hit_tokens: int = 0
     prefix_lookup_tokens: int = 0
+    # resilience counters: one increment per event (see tests/test_resilience)
+    preempted: int = 0
+    rejected: int = 0
+    deadline_expired: int = 0
+    cancelled: int = 0
+    faults_isolated: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -241,9 +315,9 @@ class ModelRunner:
 
     # -- sampling / decode ------------------------------------------------
 
-    def _sample(self, logits, temp, keys):
-        """Per-slot sampling.  logits: [B,Vp]; temp: [B]; keys: [B,2] u32."""
-        lf = logits[:, : self.vocab].astype(jnp.float32)
+    def _sample_lf(self, lf, temp, keys):
+        """Per-slot sampling from f32 vocab logits.  lf: [B,V]; temp: [B];
+        keys: [B,2] u32."""
         greedy = jnp.argmax(lf, -1).astype(jnp.int32)
 
         def one(key, lg, t):
@@ -254,10 +328,22 @@ class ModelRunner:
         keys = jax.vmap(lambda k: jax.random.split(k, 2)[1])(keys)
         return nxt, keys
 
-    def _dec_body(self, params, pages, temp):
+    def _sample(self, logits, temp, keys):
+        """Per-slot sampling.  logits: [B,Vp]; temp: [B]; keys: [B,2] u32."""
+        return self._sample_lf(logits[:, : self.vocab].astype(jnp.float32),
+                               temp, keys)
+
+    def _dec_body(self, params, pages, temp, nanmask):
         """One decode step as a scan body — shared verbatim between the
         decode-only chunk and the mixed step, so a token's math does not
-        depend on which tick shape produced it."""
+        depend on which tick shape produced it.
+
+        Fault isolation happens here, in-graph: a live slot whose logits go
+        non-finite (``nanmask`` injects NaN for the chaos harness) freezes
+        immediately — no token is taken, ``remaining`` drops to 0 — and the
+        per-step ``ok`` flag tells the host which step went bad.  Slots that
+        are already frozen decode trash-page garbage by design, so only
+        *active* slots can fault."""
         cfg = self.cfg
 
         def body(carry, _):
@@ -265,35 +351,40 @@ class ModelRunner:
             active = remaining > 0
             logits, caches = M.decode_step(cfg, params, caches, cur[:, None],
                                            pos, pages=pages)
-            nxt, keys = self._sample(logits[:, -1], temp, keys)
-            nxt = jnp.where(active, nxt, cur)  # freeze finished slots
-            step = active.astype(jnp.int32)
-            remaining = remaining - step
+            lf = logits[:, -1, : self.vocab].astype(jnp.float32)
+            lf = jnp.where(nanmask[:, None], jnp.nan, lf)
+            finite = jnp.all(jnp.isfinite(lf), -1)
+            nxt, keys = self._sample_lf(lf, temp, keys)
+            ok = finite | ~active      # a frozen slot cannot fault
+            nxt = jnp.where(active & finite, nxt, cur)
+            step = (active & finite).astype(jnp.int32)
+            remaining = jnp.where(ok, remaining - step, 0)
             if self.eos_id is not None:
-                remaining = jnp.where(active & (nxt == self.eos_id), 0,
-                                      remaining)
-            return (caches, nxt, pos + step, remaining, keys), nxt
+                remaining = jnp.where(active & finite & (nxt == self.eos_id),
+                                      0, remaining)
+            return (caches, nxt, pos + step, remaining, keys), (nxt, ok)
 
         return body
 
     def _decode_chunk(self, params, caches, pages, cur, pos, remaining, temp,
-                      keys):
-        """``decode_chunk`` fused decode steps; emits [B, steps] tokens.
-        ``pages`` [B, npp] is constant across the chunk (each request's full
-        page need is reserved at admission); finished slots freeze — their
-        table is re-pointed at the trash page on retirement, so the chunk's
+                      keys, nanmask):
+        """``decode_chunk`` fused decode steps; emits [B, steps] tokens plus
+        the matching [B, steps] per-step fault flags.  ``pages`` [B, npp] is
+        constant across the chunk (each request's page need for the chunk is
+        reserved before the tick); finished slots freeze — their table is
+        re-pointed at the trash page on retirement, so the chunk's
         unconditional KV writes can never corrupt a reallocated page."""
-        (caches, cur, pos, remaining, keys), toks = lax.scan(
-            self._dec_body(params, pages, temp),
+        (caches, cur, pos, remaining, keys), (toks, oks) = lax.scan(
+            self._dec_body(params, pages, temp, nanmask),
             (caches, cur, pos, remaining, keys), None,
             length=self.decode_chunk)
-        return caches, cur, pos, remaining, keys, toks.T  # [B, steps]
+        return caches, cur, pos, remaining, keys, toks.T, oks.T  # [B, steps]
 
     # -- the unified mixed step -------------------------------------------
 
     def _mixed(self, params, caches, chunk_toks, chunk_pages, chunk_past,
-               chunk_len, chunk_temp, chunk_key, dec_pages, cur, pos,
-               remaining, temp, keys):
+               chunk_len, chunk_temp, chunk_key, chunk_nan, dec_pages, cur,
+               pos, remaining, temp, keys, nanmask):
         """One engine tick: a prompt chunk for the prefilling slot plus one
         decode step for every decoding slot, in a single compiled call.
 
@@ -302,15 +393,21 @@ class ModelRunner:
         batch page table with the prefilling slot's row zeroed, so the
         decode pass's unconditional write for that (frozen) row lands on the
         trash page.  The chunk's sampled token/key only matter on the tick
-        the chunk completes the prompt — the host discards them otherwise."""
+        the chunk completes the prompt — the host discards them otherwise.
+        ``chunk_ok`` is the chunk-side fault flag (the chunk logits are the
+        last *valid* row, so non-finite means the prefilling slot is
+        poisoned regardless of which tick it is)."""
         logits, caches = M.chunk_step(self.cfg, params, caches, chunk_toks,
                                       chunk_pages, chunk_past, chunk_len)
-        tok0, key0 = self._sample(logits[:, -1], chunk_temp[None],
-                                  chunk_key[None])
-        (caches, cur, pos, remaining, keys), toks = lax.scan(
-            self._dec_body(params, dec_pages, temp),
+        lf = logits[:, -1, : self.vocab].astype(jnp.float32)
+        lf = jnp.where(chunk_nan, jnp.nan, lf)
+        chunk_ok = jnp.all(jnp.isfinite(lf))
+        tok0, key0 = self._sample_lf(lf, chunk_temp[None], chunk_key[None])
+        (caches, cur, pos, remaining, keys), (toks, oks) = lax.scan(
+            self._dec_body(params, dec_pages, temp, nanmask),
             (caches, cur, pos, remaining, keys), None, length=1)
-        return caches, tok0[0], key0[0], cur, pos, remaining, keys, toks.T
+        return (caches, tok0[0], key0[0], chunk_ok, cur, pos, remaining,
+                keys, toks.T, oks.T)
 
     def mixed_fn(self, C: int, limit: int):
         """The mixed-step executable for chunk-buffer size ``C`` (the only
@@ -348,12 +445,15 @@ class ModelRunner:
     def _whole_prefill(self, n: int, params, caches, tokens, table, slot,
                        temp1, rkey):
         """Exact-length whole-prompt prefill + cache insert (traceable —
-        ``repro.analysis`` walks this jaxpr; ``whole_prefill_fn`` jits it)."""
+        ``repro.analysis`` walks this jaxpr; ``whole_prefill_fn`` jits it).
+        ``ok`` is the fault flag over the sampled logits row."""
         logits, small = M.prefill(self.cfg, params, {"tokens": tokens},
                                   full_kv=True)
         caches = self._scatter_new(caches, small, table, slot, n)
-        t0, key1 = self._sample(logits[:, -1], temp1[None], rkey[None])
-        return caches, t0[0], key1[0]
+        lf = logits[:, -1, : self.vocab].astype(jnp.float32)
+        ok = jnp.all(jnp.isfinite(lf))
+        t0, key1 = self._sample_lf(lf, temp1[None], rkey[None])
+        return caches, t0[0], key1[0], ok
 
     def whole_prefill_fn(self, n: int, limit: int):
         """Jitted exact-length prefill + cache insert for mixers whose
@@ -399,16 +499,23 @@ class Scheduler:
     """Host-side request bookkeeping: the bounded admission queue, per-slot
     numpy state (page tables, positions, budgets, PRNG keys), page/radix
     accounting, and the QUEUED → PREFILLING → DECODING → RETIRED state
-    machine.  It decides *what* runs each tick (`next_chunk`); the
-    :class:`ModelRunner` decides *how*."""
+    machine (with the degraded exits — DEADLINE / CANCELLED / PREEMPTED /
+    FAULT — layered on).  It decides *what* runs each tick (`next_chunk`);
+    the :class:`ModelRunner` decides *how*."""
 
-    def __init__(self, config: EngineConfig, decomposable: bool):
+    def __init__(self, config: EngineConfig, decomposable: bool,
+                 clock=time.time):
         B = config.max_batch
         self.config = config
+        self.clock = clock
         self.page_size = config.page_size
         self.max_batch = B
         self.npp = config.cache_spec().pages_per_seq
         self.pool = PagePool(config.n_pages)
+        # preemption implies lazy page reservation: admission takes only the
+        # prompt's pages and decode rows grow tick by tick, so the pool can
+        # oversubscribe and preemption resolves the pressure
+        self.lazy = config.preemption != "off"
         # Chunked prefill (and prefix reuse) require prefill to decompose
         # over the prompt: pure attention (incl. sliding-window) qualifies;
         # SSM mixers scan state across the whole prompt, cross-attn prefill
@@ -461,7 +568,7 @@ class Scheduler:
         if i is None:
             return None
         slot = self.slots[i]
-        left = len(slot.req.prompt) - slot.offset
+        left = len(slot.req.full_prompt()) - slot.offset
         ct = self.config.chunk_tokens
         return i, (left if ct is None else min(ct, left))
 
@@ -478,27 +585,164 @@ class Scheduler:
         self.radix.evict(fresh_needed)
         return True
 
+    # -- degraded exits ---------------------------------------------------
+
+    def queue_result(self, req: Request, now: float,
+                     reason: FinishReason) -> RequestResult:
+        """Result for a request that exits without (re)gaining a slot —
+        rejected / expired / cancelled while queued.  Tokens generated
+        before a preemption are preserved (never silently dropped)."""
+        return RequestResult(
+            req.rid, req.prompt, list(req.resume_tokens), req.arrival_s,
+            req.first_token_s if req.first_token_s is not None else now,
+            now, token_times_s=list(req.token_times), finish_reason=reason)
+
+    def expire(self, now: float, stats: ServeStats):
+        """Retire every request whose deadline has passed — queued requests
+        exit empty-handed; in-flight slots keep their partial output."""
+        for req in [r for r in self.queue
+                    if r.deadline_s is not None
+                    and now - r.arrival_s > r.deadline_s]:
+            self.queue.remove(req)
+            stats.deadline_expired += 1
+            self.finished.append(
+                self.queue_result(req, now, FinishReason.DEADLINE))
+        for i, slot in enumerate(self.slots):
+            if (slot is not None and slot.req.deadline_s is not None
+                    and now - slot.req.arrival_s > slot.req.deadline_s):
+                stats.deadline_expired += 1
+                self.retire(i, now, FinishReason.DEADLINE)
+
+    def cancel(self, rid: int, now: float, stats: ServeStats) -> bool:
+        """Cancel a request wherever it is; False if unknown/finished."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                stats.cancelled += 1
+                self.finished.append(
+                    self.queue_result(req, now, FinishReason.CANCELLED))
+                return True
+        for i, slot in enumerate(self.slots):
+            if slot is not None and slot.req.rid == rid:
+                stats.cancelled += 1
+                self.retire(i, now, FinishReason.CANCELLED)
+                return True
+        return False
+
+    def _pick_victim(self) -> int | None:
+        """Preemption victim policy: the lowest-priority DECODING slot —
+        fewest tokens generated, ties broken by latest arrival (newest
+        request yields first).  The slot asking for pages is a candidate
+        like any other: when it is itself the lowest-priority slot it
+        yields (self-preempts) rather than stealing from above."""
+        cands = [i for i, s in enumerate(self.slots)
+                 if s is not None and s.phase == DECODING]
+        if not cands:
+            return None
+        return min(cands, key=lambda j: (len(self.slots[j].emitted),
+                                         -self.slots[j].req.arrival_s,
+                                         -self.slots[j].seq))
+
+    def preempt(self, i: int, stats: ServeStats):
+        """Evict slot ``i``: free its pages and either requeue it for
+        recompute (``preemption="recompute"`` — generated tokens re-enter as
+        prefill input, so greedy output stays bit-identical) or retire it
+        with its partial output (``preemption="drop"`` — load shedding)."""
+        now = self.clock()
+        slot = self.slots[i]
+        req = slot.req
+        stats.preempted += 1
+        if self.config.preemption == "drop" \
+                or len(slot.emitted) >= req.max_new:
+            self.retire(i, now, FinishReason.PREEMPTED)
+            return
+        req.resume_tokens = list(slot.emitted)
+        req.resume_key = np.array(self.keys[i])
+        req.first_token_s = slot.first_token_s
+        req.token_times = list(slot.token_times)
+        req.preemptions += 1
+        self.slots[i] = None
+        for pid in self.owned[i]:
+            self.pool.decref(pid)
+        self.owned[i] = []
+        self.pages[i] = 0
+        self.pos[i] = self.cur[i] = self.remaining[i] = 0
+        self.queue.appendleft(req)  # preempted requests keep queue priority
+
+    def ensure_rows(self, i: int, rows: int, stats: ServeStats) -> bool:
+        """Lazy page growth: make slot ``i``'s table cover ``rows`` logical
+        rows, allocating pages on demand.  On exhaustion: radix-evict, then
+        preempt the lowest-priority decoding slot — ``i`` itself when it is
+        the lowest (requeue — never raise).  Returns False when ``i`` no
+        longer holds its slot."""
+        need = -(-rows // self.page_size)
+        tries = 0
+        while len(self.owned[i]) < need:
+            pid = self.pool.alloc()
+            if pid is not None:
+                self.pages[i][len(self.owned[i])] = pid
+                self.owned[i].append(pid)
+                tries = 0
+                continue
+            tries += 1
+            if tries <= 2 and self._ensure_free_pages(1):
+                continue  # radix evicted / transient alloc fault: retry
+            victim = self._pick_victim()
+            if victim is None or victim == i:
+                self.preempt(i, stats)  # i is lowest-priority: yield
+                return False
+            self.preempt(victim, stats)
+            tries = 0
+        return True
+
+    def grow_for_decode(self, steps_bound: int, stats: ServeStats):
+        """Before a tick, grow every decoding slot's page table to cover the
+        rows the next ``steps_bound`` decode steps will write.  Growth runs
+        in descending priority order, so under pressure the high-priority
+        slots claim pages first and the victim policy preempts from the
+        bottom."""
+        order = sorted(
+            [i for i, s in enumerate(self.slots)
+             if s is not None and s.phase == DECODING],
+            key=lambda j: (-len(self.slots[j].emitted),
+                           self.slots[j].req.arrival_s, self.slots[j].seq))
+        for i in order:
+            if self.slots[i] is None:
+                continue  # preempted as a victim earlier in this pass
+            steps = min(int(self.remaining[i]), steps_bound)
+            if steps:
+                self.ensure_rows(i, int(self.pos[i]) + steps, stats)
+
+    # -- admission --------------------------------------------------------
+
     def admit(self, runner: ModelRunner, stats: ServeStats,
               variant_limit: int):
         """Move queued requests into free batch rows.  FIFO with
         head-of-line blocking: when the head request's page need cannot be
         met even after radix eviction, admission stops until retirements
-        free pages (no starvation of large requests).  On chunked
-        (prefix-decomposable) models a newly admitted slot enters
-        PREFILLING and admission holds until its prefill completes —
-        lookups must never match pages that are not fully written and
-        published; non-decomposable models prefill whole prompts inline."""
+        free pages (no starvation of large requests).  With preemption
+        enabled, admission reserves only the prompt's pages (decode rows
+        grow lazily).  On chunked (prefix-decomposable) models a newly
+        admitted slot enters PREFILLING and admission holds until its
+        prefill completes — lookups must never match pages that are not
+        fully written and published; non-decomposable models prefill whole
+        prompts inline.  A preempted request re-enters here: its prompt plus
+        already-generated tokens prefill as one sequence (radix hits make
+        that cheap), and its saved PRNG key resumes the sample chain."""
         free_rows = [i for i in range(self.max_batch)
                      if self.slots[i] is None]
         while self.queue and free_rows:
             if self.chunked and self.prefilling_slot() is not None:
                 break
             req = self.queue[0]
-            plen = len(req.prompt)
-            need = self.pages_needed(plen, req.max_new)
+            full = req.full_prompt()
+            plen = len(full)
+            new_budget = req.max_new - len(req.resume_tokens)
+            need = (self.pages_needed(plen, 0) if self.lazy
+                    else self.pages_needed(plen, new_budget))
             if self.radix is not None:
                 ht, lt = self.radix.hit_tokens, self.radix.lookup_tokens
-                m = self.radix.match(req.prompt, max_match=plen - 1)
+                m = self.radix.match(full, max_match=plen - 1)
             else:
                 m = PrefixMatch()
             fresh_needed = need - len(m.full_pages)
@@ -522,7 +766,17 @@ class Scheduler:
                 m.partial = None
                 m.tokens = len(m.full_pages) * self.page_size
                 ok = self._ensure_free_pages(fresh_needed)
+            fresh: list[int] = []
+            if ok:
+                for _ in range(fresh_needed):
+                    pid = self.pool.alloc()
+                    if pid is None:  # transient alloc fault (chaos)
+                        break
+                    fresh.append(pid)
+                ok = len(fresh) == fresh_needed
             if not ok:
+                for pid in fresh:
+                    self.pool.decref(pid)
                 for pid in pinned:
                     self.pool.decref(pid)
                 if self.radix is not None:  # blocked: don't count the lookup
@@ -533,8 +787,6 @@ class Scheduler:
             i = free_rows.pop(0)
             s = m.tokens  # cached prefix length (<= plen - 1)
             shared = list(m.full_pages)  # pins transfer to slot ownership
-            fresh = [self.pool.alloc() for _ in range(fresh_needed)]
-            assert all(p is not None for p in fresh)
             table = np.zeros(self.npp, np.int32)
             table[: len(shared)] = shared
             table[len(shared): len(shared) + len(fresh)] = fresh
@@ -545,39 +797,52 @@ class Scheduler:
                                                jnp.int32(fresh[0]))
                 self.pool.decref(donor)  # COW copy done: release the pin
 
-            key = jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))
+            key = (np.asarray(req.resume_key) if req.resume_key is not None
+                   else np.asarray(
+                       jax.random.PRNGKey(req.seed ^ (req.rid * 0x9E3779B9))))
             self.pages[i] = table
             self.owned[i] = shared + fresh
-            self.limit[i] = plen + req.max_new
+            self.limit[i] = plen + new_budget
             self.temp[i] = req.temperature
             if self.chunked:
                 # slot enters PREFILLING at the radix offset; the engine's
                 # mixed ticks stream the suffix through in chunks
-                slot = _Slot(req, phase=PREFILLING, offset=s, seq=self._seq,
-                             key=np.asarray(key))
+                slot = _Slot(req, emitted=list(req.resume_tokens),
+                             first_token_s=req.first_token_s or 0.0,
+                             phase=PREFILLING, offset=s, seq=self._seq,
+                             key=key, token_times=list(req.token_times))
                 self._seq += 1
                 self.slots[i] = slot
                 self.cur[i] = self.pos[i] = self.remaining[i] = 0
                 break  # hold admission until this prefill completes
             # non-decomposable: exact-length whole-prompt prefill, inline
             assert s == 0 and m.partial is None
-            toks = np.asarray(req.prompt, np.int32)[None]
+            toks = np.asarray(full, np.int32)[None]
             t0 = time.time()
-            runner.caches, first, key1 = runner.whole_prefill_fn(
+            runner.caches, first, key1, pok = runner.whole_prefill_fn(
                 plen, variant_limit)(
                     runner.params, runner.caches, jnp.asarray(toks),
                     jnp.asarray(table), jnp.int32(i),
-                    jnp.float32(req.temperature), key)
+                    jnp.float32(req.temperature), jnp.asarray(key))
             first = int(first)
             stats.prefill_s += time.time() - t0
             stats.prefills += 1
-            now = time.time()
-            self.slots[i] = _Slot(req, emitted=[first], first_token_s=now,
-                                  phase=DECODING, seq=self._seq,
-                                  token_times=[now])
+            now = self.clock()
+            slot = _Slot(req, emitted=list(req.resume_tokens),
+                         first_token_s=req.first_token_s or now,
+                         phase=DECODING, seq=self._seq,
+                         token_times=list(req.token_times))
             self._seq += 1
+            self.slots[i] = slot
+            if not bool(pok):  # poisoned prefill: isolate this request
+                stats.faults_isolated += 1
+                self.retire(i, now, FinishReason.FAULT)
+                free_rows.append(i)
+                continue
+            slot.emitted.append(first)
+            slot.token_times.append(now)
             self.cur[i], self.pos[i] = first, plen
-            self.remaining[i] = req.max_new - 1
+            self.remaining[i] = req.max_new - len(slot.emitted)
             self.keys[i] = np.asarray(key1)
             stats.tokens_out += 1
             if self.remaining[i] == 0 or first == self.config.eos_id:
@@ -593,18 +858,20 @@ class Scheduler:
         they fully written and safe to match.  Returns True if retired."""
         slot = self.slots[i]
         req = slot.req
-        plen = len(req.prompt)
+        full = req.full_prompt()
+        plen = len(full)
         if self.radix is not None:
             fp = plen // self.page_size
-            self.radix.insert(req.prompt[: fp * self.page_size],
+            self.radix.insert(full[: fp * self.page_size],
                               [int(self.pages[i][j]) for j in range(fp)])
         slot.phase = DECODING
-        slot.emitted = [first]
-        slot.first_token_s = now
-        slot.token_times = [now]
+        slot.emitted = list(req.resume_tokens) + [first]
+        slot.first_token_s = (req.first_token_s
+                              if req.first_token_s is not None else now)
+        slot.token_times = list(req.token_times) + [now]
         slot.key = None
         self.cur[i], self.pos[i] = first, plen
-        self.remaining[i] = req.max_new - 1
+        self.remaining[i] = req.max_new - len(slot.emitted)
         self.keys[i] = np.asarray(key1)
         stats.prefills += 1
         stats.tokens_out += 1
@@ -614,11 +881,18 @@ class Scheduler:
             return True
         return False
 
-    def retire(self, i: int, now: float):
+    def retire(self, i: int, now: float,
+               reason: FinishReason | None = None):
         s = self.slots[i]
+        if reason is None:
+            reason = (FinishReason.STOP
+                      if (self.config.eos_id is not None and s.emitted
+                          and s.emitted[-1] == self.config.eos_id)
+                      else FinishReason.LENGTH)
         self.finished.append(RequestResult(
             s.req.rid, s.req.prompt, s.emitted, s.req.arrival_s,
-            s.first_token_s, now, token_times_s=list(s.token_times)))
+            s.first_token_s, now, token_times_s=list(s.token_times),
+            finish_reason=reason))
         self.slots[i] = None
         for pid in self.owned[i]:
             self.pool.decref(pid)  # radix-held pages survive at rc >= 1
@@ -626,24 +900,33 @@ class Scheduler:
         self.pages[i] = 0  # trash page: frozen-row writes land harmlessly
         self.pos[i] = 0
         self.cur[i] = 0
+        self.remaining[i] = 0
 
-    def check_capacity(self, steps_bound: int):
+    def check_capacity(self, steps_bound: int,
+                       stats: ServeStats | None = None):
         """Refuse to decode a slot past its reserved rows.
 
         Rows beyond the reservation would route to the trash page (never
         corrupt another sequence), but reaching that state means silently
         lost context — the admission bound (``submit``) should have made it
-        impossible, so surface it as an explicit length error.
+        impossible.  With preemption enabled the engine degrades instead of
+        raising: the slot is preempted (requeue or drop), which re-derives
+        its accounting from scratch on re-admission.
         """
-        steps = np.minimum(self.remaining, steps_bound)
         for i, slot in enumerate(self.slots):
-            if (slot is not None and slot.phase == DECODING
-                    and self.pos[i] + steps[i] > self.limit[i]):
-                raise RuntimeError(
-                    f"slot {i} (rid={slot.req.rid}): decoding {int(steps[i])} "
-                    f"steps from pos={int(self.pos[i])} overruns KV capacity "
-                    f"{int(self.limit[i])} rows; request length accounting "
-                    f"is inconsistent with admission control")
+            if slot is None or slot.phase != DECODING:
+                continue
+            steps = min(int(self.remaining[i]), steps_bound)
+            if self.pos[i] + steps <= self.limit[i]:
+                continue
+            if self.lazy and stats is not None:
+                self.preempt(i, stats)
+                continue
+            raise RuntimeError(
+                f"slot {i} (rid={slot.req.rid}): decoding {steps} "
+                f"steps from pos={int(self.pos[i])} overruns KV capacity "
+                f"{int(self.limit[i])} rows; request length accounting "
+                f"is inconsistent with admission control")
 
 
 # ---------------------------------------------------------------------------
@@ -664,6 +947,13 @@ class Engine:
     maps to ``max_batch``, ``prefill_bucket`` is ignored (prefill is
     exact-length now), and the default page budget reproduces the legacy
     ``max_slots * max_len`` row capacity.
+
+    Resilience surface: per-request deadlines (``submit(deadline_s=...)``),
+    :meth:`cancel`, :meth:`close` (also the context-manager exit), bounded-
+    queue rejection with a ``retry_after_s`` hint, and — behind
+    ``EngineConfig(preemption=...)`` — page-pool preemption with recompute.
+    Pass ``chaos=ChaosInjector(...)`` to drive the fault points
+    deterministically (the injector also becomes the engine's clock).
     """
 
     #: Bound on cached executables in the runner's LRU: mixed-step variants
@@ -673,7 +963,8 @@ class Engine:
     max_prefill_variants: int = 32
 
     def __init__(self, cfg: ArchConfig, params,
-                 config: EngineConfig | int | None = None, **legacy):
+                 config: EngineConfig | int | None = None,
+                 chaos: ChaosInjector | None = None, **legacy):
         if isinstance(config, int):  # legacy positional: Engine(cfg, p, 512)
             legacy["max_len"] = config
             config = None
@@ -720,13 +1011,22 @@ class Engine:
         self.page_size = config.page_size
         self.npp = self.cache_spec.pages_per_seq
         self.stats = ServeStats()
+        self.chaos = chaos
+        self._closed = False
 
         decomposable = (not cfg.use_mla and
                         all(sp.mixer not in ("ssm", "cross")
                             for sp in cfg.layer_specs()))
         self.runner = ModelRunner(cfg, self.params, config)
-        self.sched = Scheduler(config, decomposable)
+        self.sched = Scheduler(config, decomposable, clock=self._now)
+        if chaos is not None:
+            self.sched.pool.fault = lambda: chaos.fire("pool.alloc")
         self._next_rid = 0
+
+    def _now(self) -> float:
+        """The engine clock — the chaos injector's skewed clock when one is
+        attached (deterministic deadline storms), wall time otherwise."""
+        return self.chaos.now() if self.chaos is not None else time.time()
 
     # -- state shared with the scheduler/runner (test-visible surface) ----
 
@@ -776,11 +1076,19 @@ class Engine:
     # -- admission --------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new: int = 32,
-               temperature: float = 0.0, seed: int = 0) -> int:
+               temperature: float = 0.0, seed: int = 0,
+               deadline_s: float | None = None) -> int:
         """Admit a request; returns its rid.  Raises ``ValueError`` on
-        malformed input or a request that can never fit (rows or pages) and
-        ``RuntimeError`` on queue overflow (backpressure — callers should
-        retry later)."""
+        malformed input or a request that can never fit (rows or pages —
+        rejecting at submit time keeps an impossible request from
+        head-of-line-blocking the queue forever).  Queue overflow does not
+        raise: the request finishes immediately as ``REJECTED`` with a
+        ``retry_after_s`` backpressure hint (collect it from ``step()`` /
+        ``run()`` like any other result).  ``deadline_s`` (seconds from
+        now; default ``EngineConfig.deadline_s``) bounds the request's
+        wall-clock life across queueing and execution."""
+        if self._closed:
+            raise RuntimeError("engine is closed; create a new Engine")
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt: a request must carry at least "
@@ -793,6 +1101,10 @@ class Engine:
             raise ValueError(f"max_new={max_new!r} must be an int >= 1")
         if temperature < 0.0:
             raise ValueError(f"temperature={temperature} must be >= 0")
+        if deadline_s is None:
+            deadline_s = self.config.deadline_s
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s={deadline_s} must be > 0")
         if len(prompt) + max_new > self.max_len:
             raise ValueError(
                 f"request needs {len(prompt) + max_new} cache rows > "
@@ -801,14 +1113,76 @@ class Engine:
             raise ValueError(
                 f"request needs {self.pages_needed(len(prompt), max_new)} "
                 f"pages > pool capacity {self.pool.n_pages - 1}")
-        if len(self.sched.queue) >= self.max_queue:
-            raise RuntimeError("admission queue full")
+        now = self._now()
         rid = self._next_rid
         self._next_rid += 1
+        if len(self.sched.queue) >= self.max_queue:
+            self.stats.rejected += 1
+            self.sched.finished.append(RequestResult(
+                rid, [int(t) for t in prompt], [], now, now, now,
+                finish_reason=FinishReason.REJECTED,
+                retry_after_s=self._retry_hint()))
+            return rid
         self.sched.queue.append(Request(rid, [int(t) for t in prompt],
                                         int(max_new), float(temperature),
-                                        seed, arrival_s=time.time()))
+                                        seed, arrival_s=now,
+                                        deadline_s=deadline_s))
         return rid
+
+    def _retry_hint(self) -> float:
+        """Backpressure hint for REJECTED results: the least-remaining
+        in-flight slot's tokens at the observed decode rate (fallback 50
+        ms/token before any decode has run)."""
+        rem = [int(self.sched.remaining[i])
+               for i, s in enumerate(self.sched.slots) if s is not None]
+        per_tok = (self.stats.decode_s / self.stats.tokens_out
+                   if self.stats.tokens_out and self.stats.decode_s
+                   else 0.05)
+        return round(max(min(rem) if rem else 1, 1) * max(per_tok, 1e-3), 3)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by rid — queued or in flight.  Partial output is
+        returned as a ``CANCELLED`` result from the next ``step()``; pages
+        free immediately.  False when the rid is unknown or already done."""
+        return self.sched.cancel(rid, self._now(), self.stats)
+
+    # -- shutdown ---------------------------------------------------------
+
+    def close(self) -> list[RequestResult]:
+        """Retire everything in flight as ``CANCELLED``, free all pages, and
+        verify the paging state reconciles to its initial state (free list
+        full, radix refcounts zeroed).  Returns the drained results.
+        Idempotent; ``submit``/``step`` refuse after close."""
+        if self._closed:
+            return []
+        sched = self.sched
+        now = self._now()
+        for req in list(sched.queue):
+            sched.queue.remove(req)
+            self.stats.cancelled += 1
+            sched.finished.append(
+                sched.queue_result(req, now, FinishReason.CANCELLED))
+        for i, slot in enumerate(sched.slots):
+            if slot is not None:
+                self.stats.cancelled += 1
+                sched.retire(i, now, FinishReason.CANCELLED)
+        if sched.radix is not None:
+            sched.radix.clear()
+        bad = check_invariants(self.pool, sched.radix, tables=sched.owned)
+        if self.pool.num_free != self.pool.n_pages - 1:
+            bad.append(f"pool leaked pages: {self.pool.num_free} free != "
+                       f"{self.pool.n_pages - 1} usable")
+        assert not bad, ("close(): paging state failed to reconcile: "
+                         + "; ".join(bad))
+        self._closed = True
+        out, sched.finished = sched.finished, []
+        return out
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- the tick ---------------------------------------------------------
 
@@ -825,65 +1199,112 @@ class Engine:
             C *= 2
         return min(C, round_up(self.max_len, 8))
 
+    def _nan_targets(self) -> tuple[np.ndarray, bool]:
+        """Consult the ``logits.nan`` fault point: when it fires, poison the
+        lowest-index live decoding slot (or, with none, the in-flight prompt
+        chunk) for this tick."""
+        nanmask = np.zeros(self.max_batch, bool)
+        chunk_nan = False
+        if self.chaos is not None and self.chaos.fire("logits.nan"):
+            live = [j for j, s in enumerate(self.sched.slots)
+                    if s is not None and s.phase == DECODING
+                    and self.sched.remaining[j] > 0]
+            if live:
+                nanmask[live[0]] = True
+            else:
+                chunk_nan = True
+        return nanmask, chunk_nan
+
     def _mixed_tick(self, i: int, n: int):
         """Run the unified mixed step: ``n`` prompt rows of prefilling slot
         ``i`` plus one decode step for every decoding slot."""
         sched, runner = self.sched, self.runner
+        if self.chaos is not None and self.chaos.fire("runner.mixed"):
+            # pre-dispatch: no host or device state touched yet, so the
+            # tick can simply be skipped and retried next step
+            raise ChaosError("injected mixed-step failure")
         slot = sched.slots[i]
+        full = slot.req.full_prompt()
         C = self._chunk_buf(n)
         buf = np.zeros((1, C), np.int32)
-        buf[0, :n] = slot.req.prompt[slot.offset: slot.offset + n]
+        buf[0, :n] = full[slot.offset: slot.offset + n]
+        if sched.lazy:
+            sched.grow_for_decode(1, self.stats)
+        sched.check_capacity(1, self.stats)
         dec_pages = sched.pages.copy()
         dec_pages[i] = 0  # prefilling slot's frozen decode row -> trash page
-        sched.check_capacity(1)
         before = sched.remaining.copy()
+        nanmask, chunk_nan = self._nan_targets()
         t0 = time.time()
-        (runner.caches, tok0, key1, cur, pos, remaining, keys, toks) = \
+        (runner.caches, tok0, key1, chunk_ok, cur, pos, remaining, keys,
+         toks, oks) = \
             runner.mixed_fn(C, self.max_prefill_variants)(
                 runner.params, runner.caches, jnp.asarray(buf),
                 jnp.asarray(sched.pages[i: i + 1]), jnp.int32(slot.offset),
                 jnp.int32(n), jnp.float32(slot.req.temperature),
-                jnp.asarray(slot.key), jnp.asarray(dec_pages),
+                jnp.asarray(slot.key), jnp.asarray(chunk_nan),
+                jnp.asarray(dec_pages),
                 jnp.asarray(sched.cur), jnp.asarray(sched.pos),
                 jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
-                jnp.asarray(sched.keys))
-        toks = np.asarray(toks)
+                jnp.asarray(sched.keys), jnp.asarray(nanmask))
+        toks, oks = np.asarray(toks), np.asarray(oks)
         sched.cur, sched.pos = np.array(cur), np.array(pos)
         sched.remaining, sched.keys = np.array(remaining), np.array(keys)
         self.stats.prefill_s += time.time() - t0
         self.stats.mixed_steps += 1
-        now = time.time()
-        self._emit(toks, before, now)
+        now = self._now()
+        self._emit(toks, oks, before, now)
+        if not bool(chunk_ok):
+            # poisoned prompt chunk: isolate the prefilling request (its
+            # pages were never published to the radix tree)
+            self.stats.faults_isolated += 1
+            sched.retire(i, now, FinishReason.FAULT)
+            return
         slot.offset += n
-        if slot.offset == len(slot.req.prompt):
+        if slot.offset == len(full):
             sched.commit_prefill(i, int(tok0), key1, now, self.stats)
 
     def _decode_tick(self):
         """Run one fused decode chunk (no prefill work pending)."""
         sched, runner = self.sched, self.runner
-        sched.check_capacity(self.decode_chunk)
+        if self.chaos is not None and self.chaos.fire("runner.mixed"):
+            raise ChaosError("injected decode-chunk failure")
+        if sched.lazy:
+            sched.grow_for_decode(self.decode_chunk, self.stats)
+        sched.check_capacity(self.decode_chunk, self.stats)
+        if not sched.num_active:
+            return  # every slot was preempted while growing
         before = sched.remaining.copy()
+        nanmask, _ = self._nan_targets()
         t0 = time.time()
-        (runner.caches, cur, pos, remaining, keys, toks) = runner.decode_fn(
-            runner.params, runner.caches, jnp.asarray(sched.pages),
-            jnp.asarray(sched.cur), jnp.asarray(sched.pos),
-            jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
-            jnp.asarray(sched.keys))
-        toks = np.asarray(toks)
+        (runner.caches, cur, pos, remaining, keys, toks, oks) = \
+            runner.decode_fn(
+                runner.params, runner.caches, jnp.asarray(sched.pages),
+                jnp.asarray(sched.cur), jnp.asarray(sched.pos),
+                jnp.asarray(sched.remaining), jnp.asarray(sched.temp),
+                jnp.asarray(sched.keys), jnp.asarray(nanmask))
+        toks, oks = np.asarray(toks), np.asarray(oks)
         sched.cur, sched.pos = np.array(cur), np.array(pos)
         sched.remaining, sched.keys = np.array(remaining), np.array(keys)
         self.stats.decode_s += time.time() - t0
         self.stats.chunks += 1
-        self._emit(toks, before, time.time())
+        self._emit(toks, oks, before, self._now())
 
-    def _emit(self, toks, before, now: float):
+    def _emit(self, toks, oks, before, now: float):
         """Credit decoded tokens to their slots and retire finished ones.
         ``before`` (remaining at tick start) bounds each slot's share — a
-        slot that was prefilling or frozen contributes nothing."""
+        slot that was prefilling or frozen contributes nothing.  A step
+        whose ``ok`` flag dropped marks a fault: tokens from that step on
+        are discarded and the slot retires FAULT (isolated — the other
+        slots' rows are untouched)."""
         for i, slot in enumerate(self.sched.slots):
             if slot is None or before[i] == 0:
                 continue
             take = toks[i][: before[i]]
+            bad = np.nonzero(~oks[i][: before[i]])[0]
+            faulted = bad.size > 0
+            if faulted:
+                take = take[: bad[0]]
             if self.eos_id is not None:
                 stop = np.nonzero(take == self.eos_id)[0]
                 if stop.size:
@@ -891,21 +1312,33 @@ class Engine:
             slot.emitted.extend(int(t) for t in take)
             slot.token_times.extend(now for _ in take)
             self.stats.tokens_out += len(take)
-            if self.sched.remaining[i] == 0:
+            if faulted:
+                self.stats.faults_isolated += 1
+                self.sched.retire(i, now, FinishReason.FAULT)
+            elif self.sched.remaining[i] == 0:
                 self.sched.retire(i, now)
 
     def step(self) -> list[RequestResult]:
-        """One scheduling iteration: admit, then run either the unified
-        mixed step (prompt chunk + one decode step each) or a fused
-        decode-only chunk.  Returns newly finished requests."""
+        """One scheduling iteration: expire deadlines, admit, then run
+        either the unified mixed step (prompt chunk + one decode step each)
+        or a fused decode-only chunk.  Returns newly finished requests
+        (including rejected/cancelled/expired ones)."""
+        if self._closed:
+            raise RuntimeError("engine is closed; create a new Engine")
         sched = self.sched
+        if self.chaos is not None:
+            self.chaos.fire("clock.skew")  # may advance the injected clock
+        sched.expire(self._now(), self.stats)
         sched.admit(self.runner, self.stats, self.max_prefill_variants)
         self.stats.peak_active = max(self.stats.peak_active, self.num_active)
-        nc = sched.next_chunk()
-        if nc is not None:
-            self._mixed_tick(*nc)
-        elif self.num_active:
-            self._decode_tick()
+        try:
+            nc = sched.next_chunk()
+            if nc is not None:
+                self._mixed_tick(*nc)
+            elif self.num_active:
+                self._decode_tick()
+        except ChaosError:
+            pass  # injected transient tick failure: nothing dispatched; retry
         if self.radix is not None:
             self.stats.prefix_hit_tokens = self.radix.hit_tokens
             self.stats.prefix_lookup_tokens = self.radix.lookup_tokens
@@ -913,10 +1346,13 @@ class Engine:
         return out
 
     def run(self) -> list[RequestResult]:
-        """Drive ``step`` until queue and slots drain; returns all results."""
+        """Drive ``step`` until queue and slots drain; returns all results
+        (rejected submissions included)."""
         results = []
         while self.sched.queue or self.num_active:
             results.extend(self.step())
+        out, self.sched.finished = self.sched.finished, []
+        results.extend(out)
         return results
 
     # ------------------------------------------------------------------

@@ -353,6 +353,46 @@ def test_p001_silent_on_healthy_workload():
 
 
 # ---------------------------------------------------------------------------
+# R001: resilience-branch reachability (mutation-tested like every rule)
+# ---------------------------------------------------------------------------
+
+def test_r001_silent_on_healthy_engine():
+    from repro.analysis import check_resilience
+
+    report = Report()
+    check_resilience(report)
+    assert [f for f in report.findings if f.rule == "R001"] == []
+    assert "resilience scenarios" in report.checked
+
+
+def test_r001_fires_when_deadline_expiry_disconnected(monkeypatch):
+    """A refactor that stops calling (or no-ops) Scheduler.expire must be
+    caught: DEADLINE becomes unreachable and its counter never moves."""
+    from repro.analysis import check_resilience
+    from repro.serving.engine import Scheduler
+
+    monkeypatch.setattr(Scheduler, "expire",
+                        lambda self, now, stats: None)
+    report = Report()
+    check_resilience(report)
+    msgs = [f.message for f in report.findings if f.rule == "R001"]
+    assert any("DEADLINE" in m for m in msgs)
+    assert any("deadline_expired" in m for m in msgs)
+
+
+def test_r001_fires_when_cancel_disconnected(monkeypatch):
+    from repro.analysis import check_resilience
+    from repro.serving.engine import Scheduler
+
+    monkeypatch.setattr(Scheduler, "cancel",
+                        lambda self, rid, now, stats: False)
+    report = Report()
+    check_resilience(report)
+    msgs = [f.message for f in report.findings if f.rule == "R001"]
+    assert any("CANCELLED" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
 # Report plumbing
 # ---------------------------------------------------------------------------
 

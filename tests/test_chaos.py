@@ -1,0 +1,220 @@
+"""Seeded chaos suite: the deterministic fault-injection harness driving
+the serving engine's degraded paths (DESIGN.md §10).
+
+The headline property throughout: under injected faults the engine never
+loses a request silently, its paging state reconciles, and the *survivors'*
+greedy outputs are bit-identical to a fault-free run — and because every
+fault fires from a seed/schedule, each scenario here is exactly
+reproducible (asserted by replaying one storm twice).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.serving import (FAULT_POINTS, ChaosError, ChaosInjector, Engine,
+                           EngineConfig, FinishReason)
+from repro.serving.paging import check_invariants
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = reduce_config(get_config("olmo-1b"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _econ(**kw):
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("decode_chunk", 4)
+    return EngineConfig(**kw)
+
+
+def _drain(eng):
+    results = []
+    while eng.num_queued or eng.num_active:
+        results.extend(eng.step())
+    results.extend(eng.run())
+    return {r.rid: r for r in results}
+
+
+def _reconciled(eng):
+    bad = check_invariants(eng.pool, eng.radix, tables=eng.sched.owned)
+    assert not bad, bad
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Injector unit behavior (no engine)
+# ---------------------------------------------------------------------------
+
+def test_injector_schedule_rates_and_clock():
+    with pytest.raises(ValueError):
+        ChaosInjector(schedule={"no.such.point": {0}})
+    ch = ChaosInjector(seed=7, schedule={"pool.alloc": {1, 3}},
+                       rates={"logits.nan": 0.5}, skew_s=10.0)
+    assert [ch.fire("pool.alloc") for _ in range(5)] == [
+        False, True, False, True, False]
+    assert ch.count("pool.alloc") == 2
+    with pytest.raises(ValueError):
+        ch.fire("bogus")
+    # rates are seeded per point: identical seeds replay identically
+    a = [ChaosInjector(seed=7, rates={"logits.nan": 0.5}).fire("logits.nan")
+         for _ in range(1)]
+    b = [ChaosInjector(seed=7, rates={"logits.nan": 0.5}).fire("logits.nan")
+         for _ in range(1)]
+    assert a == b
+    # the injected clock only moves when clock.skew fires
+    before = ch.now()
+    assert not ch.fire("clock.skew")  # not scheduled, no rate
+    ch.schedule["clock.skew"] = frozenset({1})
+    assert ch.fire("clock.skew")
+    assert ch.now() - before >= 10.0
+    assert ("clock.skew", 1) in ch.events
+
+
+def test_failure_injector_is_a_chaos_specialization():
+    from repro.runtime.ft import FailureInjector
+    inj = FailureInjector(fail_at={3})
+    assert isinstance(inj, ChaosInjector)
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError, match="injected node failure at step 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # each step fires at most once (restart re-traversal)
+    assert ("train.step", 3) in inj.events
+    with pytest.raises(ValueError):
+        inj.fire("pool.alloc")  # serving points are not in its catalog
+
+
+# ---------------------------------------------------------------------------
+# Transient faults: outputs bit-identical to a fault-free run
+# ---------------------------------------------------------------------------
+
+def _run(cfg, params, prompts, max_new=10, chaos=None, **ekw):
+    eng = Engine(cfg, params, _econ(**ekw), chaos=chaos)
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    res = _drain(eng)
+    assert _reconciled(eng)
+    return eng, [res[r] for r in rids]
+
+
+def test_pool_alloc_faults_are_survived(olmo):
+    """Transient pool.alloc failures (admission rollback + growth retries,
+    preemption as the backstop): every request still completes and greedy
+    outputs match the fault-free run bit for bit."""
+    cfg, params = olmo
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, 16).tolist() for _ in range(3)]
+    kw = dict(max_batch=2, prefix_cache=False, preemption="recompute")
+    _, want = _run(cfg, params, prompts, **kw)
+    chaos = ChaosInjector(seed=11, rates={"pool.alloc": 0.3})
+    eng, got = _run(cfg, params, prompts, chaos=chaos, **kw)
+    assert chaos.count("pool.alloc") > 0  # the storm actually fired
+    for w, g in zip(want, got):
+        assert g.ok and g.generated == w.generated
+
+
+def test_mixed_tick_transient_failures_retry(olmo):
+    """runner.mixed failures are raised pre-dispatch, absorbed by step(),
+    and the tick retries: results are unchanged, just later."""
+    cfg, params = olmo
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, 20).tolist() for _ in range(2)]
+    kw = dict(max_batch=2, chunk_tokens=8, prefix_cache=False)
+    _, want = _run(cfg, params, prompts, **kw)
+    chaos = ChaosInjector(schedule={"runner.mixed": {0, 2, 3}})
+    eng, got = _run(cfg, params, prompts, chaos=chaos, **kw)
+    assert chaos.count("runner.mixed") == 3
+    for w, g in zip(want, got):
+        assert g.ok and g.generated == w.generated
+
+
+def test_chaos_error_escapes_nothing(olmo):
+    """A scheduled runner.mixed fault on every consult still terminates:
+    submit + close() under a 100% transient-failure storm."""
+    cfg, params = olmo
+    chaos = ChaosInjector(rates={"runner.mixed": 1.0})
+    eng = Engine(cfg, params, _econ(max_batch=1), chaos=chaos)
+    eng.submit(list(range(1, 9)), max_new=4)
+    for _ in range(5):
+        eng.step()  # every tick is injected-failed; nothing dispatches
+    assert eng.stats.tokens_out == 0
+    res = eng.close()
+    assert [r.finish_reason for r in res] == [FinishReason.CANCELLED]
+
+
+# ---------------------------------------------------------------------------
+# Preempt/resume under radix COW sharing
+# ---------------------------------------------------------------------------
+
+def test_preempt_resume_with_shared_prefix_pages(olmo):
+    """Recompute-preemption with radix sharing live: preempted requests
+    resume through prefix hits on pages their siblings still share, and
+    outputs stay bit-identical to an unpressured run."""
+    cfg, params = olmo
+    rng = np.random.RandomState(2)
+    prefix = rng.randint(1, cfg.vocab_size, 32).tolist()
+    prompts = [prefix + rng.randint(1, cfg.vocab_size, 4).tolist()
+               for _ in range(3)]
+    kw = dict(max_batch=3, prefix_cache=True)
+    _, want = _run(cfg, params, prompts, max_new=16, **kw)
+    eng, got = _run(cfg, params, prompts, max_new=16, n_pages=8,
+                    preemption="recompute", **kw)
+    assert eng.stats.preempted >= 1  # the small pool actually preempted
+    assert eng.prefix_hit_rate > 0.0
+    for w, g in zip(want, got):
+        assert g.ok and g.generated == w.generated
+
+
+# ---------------------------------------------------------------------------
+# The seeded storm: everything at once, twice, bit-identical
+# ---------------------------------------------------------------------------
+
+def _storm(cfg, params, seed):
+    rng = np.random.RandomState(3)  # same workload both runs
+    prompts = [rng.randint(1, cfg.vocab_size, 16).tolist() for _ in range(5)]
+    chaos = ChaosInjector(
+        seed=seed,
+        rates={"pool.alloc": 0.15, "runner.mixed": 0.15, "logits.nan": 0.1},
+        schedule={"clock.skew": {25}}, skew_s=30.0)
+    eng = Engine(cfg, params,
+                 _econ(max_batch=2, n_pages=6, max_queue=3,
+                       prefix_cache=False, preemption="recompute"),
+                 chaos=chaos)
+    rids = [eng.submit(p, max_new=8, deadline_s=60.0) for p in prompts]
+    res = _drain(eng)
+    assert _reconciled(eng)
+    assert set(res) == set(rids)  # no request lost, none invented
+    leftover = eng.close()
+    assert leftover == []
+    return ([(r, res[r].finish_reason, tuple(res[r].generated))
+             for r in rids], list(chaos.events), eng.stats)
+
+
+def test_seeded_storm_is_deterministic_and_lossless(olmo):
+    cfg, params = olmo
+    out1, events1, stats1 = _storm(cfg, params, seed=123)
+    out2, events2, stats2 = _storm(cfg, params, seed=123)
+    assert out1 == out2
+    assert events1 == events2 and len(events1) > 0
+    assert (stats1.preempted, stats1.rejected, stats1.deadline_expired,
+            stats1.faults_isolated) == \
+           (stats2.preempted, stats2.rejected, stats2.deadline_expired,
+            stats2.faults_isolated)
+    # a different seed draws a different storm (rates actually consult RNG)
+    out3, events3, _ = _storm(cfg, params, seed=124)
+    assert events3 != events1
+    # every exit is a catalogued FinishReason; faults only where injected
+    assert {r[1] for r in out1} <= set(FinishReason)
+    if stats1.faults_isolated == 0:
+        assert all(r[1] != FinishReason.FAULT for r in out1)
+
+
+def test_fault_points_catalog_is_closed():
+    """The catalog the engine consults is exactly the documented one — a
+    new fault point must be added here and in DESIGN.md §10 together."""
+    assert FAULT_POINTS == ("pool.alloc", "runner.mixed", "logits.nan",
+                            "clock.skew")
+    assert issubclass(ChaosError, RuntimeError)

@@ -84,6 +84,37 @@ SCRIPT = textwrap.dedent("""
     assert tok(results) == tok(rres), "mid-stream prefill diverged"
     print("MIDSTREAM-OK")
 
+    # resilience counters under mesh: the same composed scenario as
+    # tests/test_resilience.py (one REJECTED / CANCELLED / FAULT /
+    # DEADLINE each) must move every ServeStats counter exactly once
+    # through the sharded executables
+    from repro.serving import ChaosInjector, FinishReason
+    chaos = ChaosInjector(schedule={"logits.nan": {2}, "clock.skew": {6}},
+                          skew_s=1000.0)
+    reng = Engine(cfg, params,
+                  EngineConfig(mesh=MeshSpec(1, 2), max_batch=1, max_len=128,
+                               page_size=16, decode_chunk=4, max_queue=2,
+                               prefix_cache=False),
+                  chaos=chaos)
+    mk = lambda i: [(11 * i + j) % cfg.vocab_size for j in range(20)]
+    ra = reng.submit(mk(1), 6)                      # FAULT at tick 2
+    rb = reng.submit(mk(2), 6)                      # cancelled in queue
+    rc = reng.submit(mk(3), 6)                      # queue full: REJECTED
+    assert reng.cancel(rb)
+    rd = reng.submit(mk(4), 30, deadline_s=5.0)     # expires at tick 6
+    rres = []
+    while reng.num_queued or reng.num_active:
+        rres.extend(reng.step())
+    rres.extend(reng.run())
+    rmap = {r.rid: r.finish_reason for r in rres}
+    assert rmap == {ra: FinishReason.FAULT, rb: FinishReason.CANCELLED,
+                    rc: FinishReason.REJECTED, rd: FinishReason.DEADLINE}, rmap
+    s = reng.stats
+    assert (s.rejected, s.cancelled, s.faults_isolated, s.deadline_expired,
+            s.preempted) == (1, 1, 1, 1, 0)
+    assert reng.pool.num_free == reng.pool.n_pages - 1
+    print("RESILIENCE-OK")
+
     # MoE expert-parallel decode: tokens match greedy single-device and
     # prefill logits stay within 1e-4
     mcfg = reduce_config(get_config("qwen3-moe-30b-a3b"))
@@ -119,7 +150,7 @@ def test_mesh_serving_parity_subprocess():
                          capture_output=True, text=True, timeout=600)
     out = res.stdout
     for sentinel in ("DENSE-PARITY-OK", "RADIX-OK", "MIDSTREAM-OK",
-                     "MOE-PARITY-OK"):
+                     "RESILIENCE-OK", "MOE-PARITY-OK"):
         assert sentinel in out, out + res.stderr
 
 

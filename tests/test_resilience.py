@@ -1,0 +1,356 @@
+"""Serving resilience: deadlines, cancellation, page-pool preemption with
+recompute, per-request fault isolation, bounded-queue rejection, and clean
+shutdown (DESIGN.md §10).
+
+Every degraded exit carries a :class:`FinishReason` and increments exactly
+one ``ServeStats`` counter; greedy outputs after a recompute-preemption are
+bit-identical to the never-preempted run.  Deadline tests drive the engine
+clock through :class:`ChaosInjector` skew schedules so they are
+deterministic — no sleeps, no wall-clock races.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import model as M
+from repro.serving import (ChaosInjector, Engine, EngineConfig, FinishReason,
+                           bytes_tokenizer_encode)
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = reduce_config(get_config("olmo-1b"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    cfg = reduce_config(get_config("mamba2-130m"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, texts):
+    return [bytes_tokenizer_encode(t, cfg.vocab_size) for t in texts]
+
+
+def _econ(**kw):
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("decode_chunk", 4)
+    return EngineConfig(**kw)
+
+
+def _drain(eng):
+    results = []
+    while eng.num_queued or eng.num_active:
+        results.extend(eng.step())
+    results.extend(eng.run())
+    return {r.rid: r for r in results}
+
+
+# ---------------------------------------------------------------------------
+# FinishReason: healthy exits
+# ---------------------------------------------------------------------------
+
+def test_finish_reason_healthy_exits(olmo):
+    cfg, params = olmo
+    p = _prompts(cfg, ["healthy"])[0]
+    eng = Engine(cfg, params, _econ(max_batch=1))
+    r0 = eng.submit(p, max_new=6)
+    res = {r.rid: r for r in eng.run()}
+    assert res[r0].finish_reason == FinishReason.LENGTH and res[r0].ok
+    first = res[r0].generated[0]
+    # same prompt with eos_id = its first greedy token -> STOP after 1 token
+    eng2 = Engine(cfg, params, _econ(max_batch=1, eos_id=first))
+    r1 = eng2.submit(p, max_new=6)
+    res2 = {r.rid: r for r in eng2.run()}
+    assert res2[r1].finish_reason == FinishReason.STOP and res2[r1].ok
+    assert res2[r1].generated == [first]
+
+
+# ---------------------------------------------------------------------------
+# Deadlines (deterministic via injected clock skew)
+# ---------------------------------------------------------------------------
+
+def test_deadline_default_override_and_partial_output(olmo):
+    """Config-default deadline expires an in-flight request (keeping its
+    partial output) and a queued one (empty-handed); a per-submit override
+    above the skew survives."""
+    cfg, params = olmo
+    pa, pb, pc = _prompts(cfg, ["deadline aa", "deadline bb", "deadline cc"])
+    chaos = ChaosInjector(schedule={"clock.skew": {3}}, skew_s=1000.0)
+    eng = Engine(cfg, params, _econ(max_batch=1, deadline_s=5.0),
+                 chaos=chaos)
+    ra = eng.submit(pa, max_new=20)                     # config default (5 s)
+    rb = eng.submit(pb, max_new=4)                      # queued behind ra
+    rc = eng.submit(pc, max_new=4, deadline_s=2000.0)   # outlives the skew
+    res = _drain(eng)
+    assert res[ra].finish_reason == FinishReason.DEADLINE
+    assert len(res[ra].generated) > 0          # in-flight: partial kept
+    assert res[rb].finish_reason == FinishReason.DEADLINE
+    assert res[rb].generated == []             # queued: never ran
+    assert res[rc].finish_reason == FinishReason.LENGTH
+    assert eng.stats.deadline_expired == 2
+    # the pool reconciles after the expiries
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+    with pytest.raises(ValueError):
+        eng.submit(pa, max_new=4, deadline_s=-1.0)
+    with pytest.raises(ValueError):
+        EngineConfig(deadline_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_inflight(olmo):
+    cfg, params = olmo
+    pa, pb = _prompts(cfg, ["cancel me aa", "cancel me bb"])
+    eng = Engine(cfg, params, _econ(max_batch=1))
+    ra = eng.submit(pa, max_new=20)
+    rb = eng.submit(pb, max_new=20)
+    eng.step()
+    eng.step()
+    assert eng.cancel(rb)          # still queued: exits empty-handed
+    assert eng.cancel(ra)          # in flight: partial output kept
+    assert not eng.cancel(999)     # unknown rid
+    assert not eng.cancel(ra)      # already retired
+    res = _drain(eng)
+    assert res[ra].finish_reason == FinishReason.CANCELLED
+    assert len(res[ra].generated) > 0
+    assert res[rb].finish_reason == FinishReason.CANCELLED
+    assert res[rb].generated == []
+    assert eng.stats.cancelled == 2
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Admission: impossible requests still raise, even with preemption on
+# ---------------------------------------------------------------------------
+
+def test_submit_time_capacity_errors_with_preemption(olmo):
+    """Requests that can *never* run (rows or pages beyond the whole pool)
+    raise at submit time in every preemption mode — lazy reservation must
+    not admit an impossible request into a preemption livelock."""
+    cfg, params = olmo
+    for mode in ("off", "recompute"):
+        eng = Engine(cfg, params, _econ(max_len=64, max_batch=1, n_pages=3,
+                                        preemption=mode))
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(list(range(40)), max_new=32)
+        with pytest.raises(ValueError, match="pool capacity"):
+            eng.submit(list(range(20)), max_new=20)  # 3 pages > 2 usable
+
+
+# ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+
+def test_preemption_recompute_bit_parity(olmo):
+    """Pool exhaustion mid-decode preempts and requeues; greedy outputs are
+    bit-identical to a run that never felt pressure."""
+    cfg, params = olmo
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, 16).tolist() for _ in range(2)]
+
+    big = Engine(cfg, params, _econ(max_len=64, max_batch=2,
+                                    prefix_cache=False))
+    want, _ = big.generate(prompts, max_new=20)
+
+    small = Engine(cfg, params, _econ(max_len=64, max_batch=2, n_pages=4,
+                                      prefix_cache=False,
+                                      preemption="recompute"))
+    rids = [small.submit(p, max_new=20) for p in prompts]
+    res = _drain(small)
+    assert small.stats.preempted >= 1
+    for rid, p, w in zip(rids, prompts, want):
+        assert res[rid].ok
+        assert p + res[rid].generated == w   # bit-identical to no-pressure run
+    # accounting reconciles after the preempt/recompute churn
+    assert small.pool.num_free == small.pool.n_pages - 1
+
+
+def test_preemption_drop_sheds_lowest_priority(olmo):
+    """``preemption="drop"``: the victim retires PREEMPTED with its partial
+    output instead of requeueing."""
+    cfg, params = olmo
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, 16).tolist() for _ in range(2)]
+    eng = Engine(cfg, params, _econ(max_len=64, max_batch=2, n_pages=4,
+                                    prefix_cache=False, preemption="drop"))
+    rids = [eng.submit(p, max_new=20) for p in prompts]
+    res = _drain(eng)
+    assert eng.stats.preempted == 1
+    reasons = sorted(res[r].finish_reason for r in rids)
+    assert reasons == [FinishReason.LENGTH, FinishReason.PREEMPTED]
+    dropped = next(r for r in rids
+                   if res[r].finish_reason == FinishReason.PREEMPTED)
+    assert not res[dropped].ok
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+
+def test_victim_policy_prefers_fewest_tokens_latest_arrival(olmo):
+    """Three decoding slots, one page short: the victim is the slot with
+    the fewest generated tokens (ties by latest arrival) — here the last
+    request admitted, which yields to the two ahead of it."""
+    cfg, params = olmo
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, 16).tolist() for _ in range(3)]
+    # 5 usable pages vs 3 requests x 2 pages = 6: exactly one short
+    eng = Engine(cfg, params, _econ(max_len=32, max_batch=3, n_pages=6,
+                                    prefix_cache=False, preemption="drop"))
+    rids = [eng.submit(p, max_new=8) for p in prompts]
+    res = _drain(eng)
+    assert eng.stats.preempted == 1
+    assert res[rids[2]].finish_reason == FinishReason.PREEMPTED
+    assert res[rids[0]].ok and res[rids[1]].ok
+
+
+def test_capacity_overrun_degrades_instead_of_raising(olmo):
+    """Mirror of test_serving.test_decode_past_capacity_is_explicit_error:
+    with preemption enabled the same corrupted accounting degrades to a
+    preemption — the engine never raises from check_capacity (ISSUE
+    acceptance)."""
+    cfg, params = olmo
+    eng = Engine(cfg, params, _econ(max_len=32, max_batch=1,
+                                    preemption="recompute"))
+    rid = eng.submit(_prompts(cfg, ["overrun"])[0], max_new=8)
+    eng.step()
+    assert eng.num_active == 1
+    eng._remaining[0] = 1000  # simulate corrupted length accounting
+    res = _drain(eng)         # must not raise
+    assert eng.stats.preempted >= 1
+    assert res[rid].finish_reason == FinishReason.PREEMPTED
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Fault isolation
+# ---------------------------------------------------------------------------
+
+def test_fault_isolates_poisoned_slot_only(olmo):
+    """Injected NaN logits retire exactly the poisoned slot with FAULT; the
+    other in-flight request's output is bit-identical to a healthy run."""
+    cfg, params = olmo
+    pa, pb = _prompts(cfg, ["poison target!", "healthy neighbor"])
+    healthy = Engine(cfg, params, _econ(max_batch=2, prefix_cache=False))
+    want, _ = healthy.generate([pa, pb], max_new=8)
+
+    chaos = ChaosInjector(schedule={"logits.nan": {2}})
+    eng = Engine(cfg, params, _econ(max_batch=2, prefix_cache=False),
+                 chaos=chaos)
+    ra = eng.submit(pa, max_new=8)   # lowest slot index: the nan target
+    rb = eng.submit(pb, max_new=8)
+    res = _drain(eng)
+    assert res[ra].finish_reason == FinishReason.FAULT and not res[ra].ok
+    assert len(res[ra].generated) < 8          # truncated at the bad step
+    assert res[rb].finish_reason == FinishReason.LENGTH
+    assert pb + res[rb].generated == want[1]   # neighbor unaffected
+    assert eng.stats.faults_isolated == 1
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Shutdown
+# ---------------------------------------------------------------------------
+
+def test_close_retires_inflight_and_reconciles(olmo):
+    cfg, params = olmo
+    pa, pb = _prompts(cfg, ["close one", "close two"])
+    eng = Engine(cfg, params, _econ(max_batch=1))
+    ra = eng.submit(pa, max_new=20)
+    rb = eng.submit(pb, max_new=20)
+    eng.step()
+    eng.step()
+    res = {r.rid: r for r in eng.close()}
+    assert res[ra].finish_reason == FinishReason.CANCELLED
+    assert len(res[ra].generated) > 0          # partial output preserved
+    assert res[rb].finish_reason == FinishReason.CANCELLED
+    assert eng.stats.cancelled == 2
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+    assert eng.close() == []                   # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(pa, max_new=4)
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.step()
+
+
+def test_context_manager_closes_with_radix_state(olmo):
+    """Exit-through-``with`` reconciles even with radix-shared pages and
+    preemption enabled mid-flight."""
+    cfg, params = olmo
+    rng = np.random.RandomState(3)
+    prefix = rng.randint(1, cfg.vocab_size, 32).tolist()
+    prompts = [prefix + rng.randint(1, cfg.vocab_size, 4).tolist()
+               for _ in range(3)]
+    with Engine(cfg, params, _econ(max_batch=2, preemption="recompute")) \
+            as eng:
+        eng.generate(prompts[:2], max_new=4)   # publishes prefix pages
+        eng.submit(prompts[2], max_new=20)
+        eng.step()
+        pool = eng.pool
+    assert eng._closed
+    assert pool.num_free == pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Counters: exactly once per event, chunked and unchunked
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_tokens", [None, 8])
+def test_counters_increment_exactly_once(olmo, chunk_tokens):
+    """One composed scenario producing exactly one REJECTED, CANCELLED,
+    FAULT and DEADLINE each — every counter moves exactly once, across both
+    the chunked and whole-suffix prefill paths."""
+    cfg, params = olmo
+    rng = np.random.RandomState(4)
+    mk = lambda: rng.randint(1, cfg.vocab_size, 20).tolist()
+    chaos = ChaosInjector(schedule={"logits.nan": {2}, "clock.skew": {6}},
+                          skew_s=1000.0)
+    eng = Engine(cfg, params,
+                 _econ(max_batch=1, max_queue=2, prefix_cache=False,
+                       chunk_tokens=chunk_tokens),
+                 chaos=chaos)
+    ra = eng.submit(mk(), max_new=6)                    # will FAULT (tick 2)
+    rb = eng.submit(mk(), max_new=6)                    # cancelled in queue
+    rc = eng.submit(mk(), max_new=6)                    # queue full: REJECTED
+    assert eng.cancel(rb)
+    rd = eng.submit(mk(), max_new=30, deadline_s=5.0)   # expires at tick 6
+    res = _drain(eng)
+    assert res[ra].finish_reason == FinishReason.FAULT
+    assert res[rb].finish_reason == FinishReason.CANCELLED
+    assert res[rc].finish_reason == FinishReason.REJECTED
+    assert res[rc].retry_after_s > 0
+    assert res[rd].finish_reason == FinishReason.DEADLINE
+    s = eng.stats
+    assert (s.rejected, s.cancelled, s.faults_isolated,
+            s.deadline_expired, s.preempted) == (1, 1, 1, 1, 0)
+    assert len(res) == 4
+    assert eng.pool.num_free == eng.pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Non-decomposable (whole-prompt prefill) models
+# ---------------------------------------------------------------------------
+
+def test_whole_prefill_models_cancel_and_deadline(mamba):
+    """SSM prefill is not chunkable; deadlines and cancellation must still
+    work through the inline whole-prompt admission path."""
+    cfg, params = mamba
+    pa, pb = _prompts(cfg, ["state space aa", "state space bb"])
+    chaos = ChaosInjector(schedule={"clock.skew": {4}}, skew_s=1000.0)
+    eng = Engine(cfg, params, _econ(max_batch=1), chaos=chaos)
+    ra = eng.submit(pa, max_new=30)
+    rb = eng.submit(pb, max_new=30, deadline_s=5.0)
+    eng.step()
+    assert eng.cancel(ra)          # in flight (decoding after whole prefill)
+    res = _drain(eng)
+    assert res[ra].finish_reason == FinishReason.CANCELLED
+    assert len(res[ra].generated) > 0
+    assert res[rb].finish_reason == FinishReason.DEADLINE
+    assert eng.stats.cancelled == 1 and eng.stats.deadline_expired == 1
+    assert eng.pool.num_free == eng.pool.n_pages - 1

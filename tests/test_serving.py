@@ -12,7 +12,8 @@ import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.models import model as M
-from repro.serving import Engine, EngineConfig, bytes_tokenizer_encode
+from repro.serving import (Engine, EngineConfig, FinishReason,
+                           bytes_tokenizer_encode)
 
 
 @pytest.fixture(scope="module")
@@ -143,9 +144,15 @@ def test_admission_control(olmo):
         eng.submit([], max_new=4)
     eng.submit([1, 2, 3], max_new=4)
     eng.submit([1, 2, 3], max_new=4)
-    with pytest.raises(RuntimeError):  # queue bound -> backpressure
-        eng.submit([1, 2, 3], max_new=4)
-    assert len(eng.run()) == 2
+    # queue bound -> backpressure: never a raise or a silent drop, the
+    # request finishes immediately as REJECTED with a retry hint
+    rej = eng.submit([1, 2, 3], max_new=4)
+    res = {r.rid: r for r in eng.run()}
+    assert len(res) == 3
+    assert res[rej].finish_reason == FinishReason.REJECTED
+    assert not res[rej].ok and res[rej].retry_after_s > 0
+    assert eng.stats.rejected == 1
+    assert sum(r.ok for r in res.values()) == 2
 
 
 def test_admission_rejects_requests_larger_than_pool(olmo):
